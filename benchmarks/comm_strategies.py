@@ -1,0 +1,44 @@
+"""Fig. 14/15: per-level cost of standard/NAP-2/NAP-3 for the SpMV (A·x) and
+SpGEMM (A·P) operations, plus the model's choice.  Times are modeled
+(max-rate, Blue Waters constants); message counts/bytes come from actually
+executing the schedules in the rank simulator."""
+import time
+
+import numpy as np
+
+from repro.amg import setup
+from repro.amg.dist import (matrix_comm_graph, row_partition,
+                            vector_comm_graph)
+from repro.amg.problems import laplace_3d
+from repro.core import BLUE_WATERS, Topology, build
+from repro.core.perf_model import model_time
+from repro.core.simulator import verify
+
+
+def rows(n=16, n_nodes=16, ppn=16):
+    topo = Topology(n_nodes=n_nodes, ppn=ppn)
+    A = laplace_3d(n)
+    h = setup(A, solver="rs")
+    out = []
+    for l, lv in enumerate(h.levels):
+        part = row_partition(lv.A, topo)
+        graphs = {"spmv_Ax": vector_comm_graph(lv.A, part)}
+        if lv.P is not None:
+            graphs["spgemm_AP"] = matrix_comm_graph(lv.A, lv.P, part)
+        for op, g in graphs.items():
+            times = {}
+            for strat in ("standard", "nap2", "nap3"):
+                sch = build(strat, g)
+                t0 = time.perf_counter()
+                res = verify(sch, np.random.default_rng(l).standard_normal(
+                    g.partition.n))
+                sim_us = (time.perf_counter() - t0) * 1e6
+                t = model_time(sch, BLUE_WATERS)
+                times[strat] = t
+                out.append((f"fig14_L{l}_{op}_{strat}", t * 1e6,
+                            f"inter_msgs={res.inter_msgs};"
+                            f"inter_KB={res.inter_bytes / 1024:.1f};"
+                            f"sim_us={sim_us:.0f}"))
+            best = min(times, key=times.get)
+            out.append((f"fig15_L{l}_{op}_chosen", times[best] * 1e6, best))
+    return out

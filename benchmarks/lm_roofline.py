@@ -1,0 +1,34 @@
+"""Roofline table (EXPERIMENTS.md §Roofline source): reads the dry-run
+sweep JSON and prints per-(arch × shape × mesh) terms."""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.json")
+
+
+def rows(path=RESULTS):
+    if not os.path.exists(path):
+        return [("lm_roofline_missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all --both-meshes")]
+    out = []
+    for r in json.load(open(path)):
+        name = f"roofline_{r['arch']}_{r['shape']}_{r.get('mesh', '?')}"
+        if r.get("skipped"):
+            out.append((name, 0.0, "skipped:" + r["skipped"][:40]))
+            continue
+        if "error" in r:
+            out.append((name, 0.0, "ERROR:" + r["error"][:60]))
+            continue
+        if "compute_s" not in r:   # AMG spmv entries: collective bytes only
+            out.append((name, 0.0,
+                        f"coll_B={r.get('coll_bytes_per_dev', 0):.3g};"
+                        f"xpod_B={r.get('cross_pod_bytes_per_dev', 0):.3g}"))
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"],
+                    r["cross_pod_s"])
+        out.append((name, bound * 1e6,
+                    f"dom={r['dominant']};roofline={r['roofline_fraction']:.4f};"
+                    f"compute_s={r['compute_s']:.3f};memory_s={r['memory_s']:.3f};"
+                    f"coll_s={r['collective_s']:.3f};xpod_s={r['cross_pod_s']:.3f}"))
+    return out

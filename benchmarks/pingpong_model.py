@@ -1,0 +1,21 @@
+"""Fig. 8/9: single-message cost by locality, and inter-node max-rate vs
+active process count."""
+import numpy as np
+
+from repro.core.perf_model import (BLUE_WATERS, maxrate_internode_time,
+                                   single_message_time)
+
+
+def rows():
+    out = []
+    for nbytes in (64, 1024, 16384, 262144, 4 << 20):
+        for loc in ("socket", "node", "network"):
+            t = single_message_time(BLUE_WATERS, nbytes, loc)
+            out.append((f"fig8_pingpong_{loc}_{nbytes}B", t * 1e6,
+                        f"bytes={nbytes}"))
+    total = 4 << 20
+    for k in (1, 2, 4, 8, 16):
+        t = maxrate_internode_time(BLUE_WATERS, total, k)
+        out.append((f"fig9_maxrate_active{k}", t * 1e6,
+                    f"total=4MiB,procs={k}"))
+    return out

@@ -1,0 +1,41 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import time
+
+from . import (amg_levels, amg_scaling, comm_strategies, lm_roofline,
+               pingpong_model, ptap_sweeps)
+from repro.core.perf_model import BLUE_WATERS, QUARTZ
+
+MODULES = [
+    ("fig8_9", lambda: pingpong_model.rows()),
+    ("fig14_15", lambda: comm_strategies.rows()),
+    ("fig2_4", lambda: amg_levels.rows()),
+    ("fig16_17_bw", lambda: amg_scaling.rows("graddiv", BLUE_WATERS)),
+    ("fig18", lambda: amg_scaling.rows("laplace", BLUE_WATERS)),
+    ("fig19_quartz", lambda: amg_scaling.rows("graddiv", QUARTZ)),
+    ("fig20_weak", lambda: amg_scaling.rows("graddiv", BLUE_WATERS,
+                                            weak=True)),
+    ("fig21", lambda: ptap_sweeps.rows()),
+    ("roofline", lambda: lm_roofline.rows()),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for tag, fn in MODULES:
+        if only and only not in tag:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{tag}_ERROR,0.0,{type(e).__name__}:{e}")
+        print(f"# {tag} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,82 @@
+"""Generate the §Dry-run and §Roofline markdown tables from
+dryrun_results.json (paste into EXPERIMENTS.md)."""
+import json
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "n/a"
+    for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if b >= div:
+            return f"{b / div:.2f} {unit}"
+    return f"{b:.0f} B"
+
+
+def main(path="dryrun_results.json"):
+    rs = json.load(open(path))
+    cells = {}
+    skips = {}
+    for r in rs:
+        if r.get("skipped"):
+            skips[(r["arch"], r["shape"])] = r["skipped"]
+            continue
+        if str(r.get("arch", "")).startswith("amg_spmv"):
+            continue
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+
+    print("### §Dry-run (lower+compile per cell; peak bytes/device from "
+          "memory_analysis)\n")
+    print("| arch | shape | mesh | compile s | peak/dev | collectives | "
+          "cross-pod bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    archs = sorted({k[0] for k in cells} | {k[0] for k in skips})
+    for a in archs:
+        for s in ORDER:
+            if (a, s) in skips:
+                print(f"| {a} | {s} | — | — | — | — | SKIPPED "
+                      f"({skips[(a, s)]}) |")
+                continue
+            for mesh in ("16x16", "2x16x16"):
+                r = cells.get((a, s, mesh))
+                if not r:
+                    continue
+                if "error" in r:
+                    print(f"| {a} | {s} | {mesh} | ERROR {r['error'][:50]} |")
+                    continue
+                peak = r.get("memory_analysis", {}).get("peak_per_device")
+                print(f"| {a} | {s} | {mesh} | {r['compile_s']:.0f} | "
+                      f"{fmt_bytes(peak)} | {r.get('n_collectives', 0):.0f} | "
+                      f"{fmt_bytes(r.get('cross_pod_bytes_per_dev'))} |")
+
+    print("\n### §Roofline (terms in seconds/step; single-pod 16x16)\n")
+    print("| arch | shape | compute | memory (HLO) | memory floor | "
+          "collective | dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in ORDER:
+            r = cells.get((a, s, "16x16"))
+            if not r or "error" in r:
+                continue
+            print(f"| {a} | {s} | {r['compute_s']:.3f} | "
+                  f"{r['memory_s']:.3f} | {r.get('memory_floor_s', 0):.3f} | "
+                  f"{r['collective_s']:.3f} | {r['dominant']} | "
+                  f"{r['useful_flops_fraction']:.2f} | "
+                  f"{r['roofline_fraction']:.4f} |")
+
+    print("\n### multi-pod (2x16x16) cross-pod view\n")
+    print("| arch | shape | cross-pod bytes/dev | cross-pod s | dominant |")
+    print("|---|---|---|---|---|")
+    for a in archs:
+        for s in ORDER:
+            r = cells.get((a, s, "2x16x16"))
+            if not r or "error" in r:
+                continue
+            print(f"| {a} | {s} | {fmt_bytes(r['cross_pod_bytes_per_dev'])} | "
+                  f"{r['cross_pod_s']:.3f} | {r['dominant']} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,8 @@
+"""Algebraic multigrid substrate (setup + solve), pure numpy host-side, with
+distributed communication analysis via :mod:`repro.core`."""
+from .csr import CSR
+from .hierarchy import Hierarchy, Level, setup
+from .solve import SolveOptions, SolveResult, pcg, solve, vcycle
+
+__all__ = ["CSR", "Hierarchy", "Level", "setup", "SolveOptions", "SolveResult",
+           "pcg", "solve", "vcycle"]

@@ -1,0 +1,87 @@
+"""AMG setup (Algorithm 1) for Ruge-Stüben and smoothed-aggregation solvers."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .csr import CSR
+from .interpolation import (direct_interpolation, jacobi_smooth_prolongator,
+                            tentative_prolongator)
+from .splitting import mis2_aggregation, pmis
+from .strength import classical_strength, symmetric_strength
+
+
+@dataclasses.dataclass
+class Level:
+    A: CSR
+    P: CSR | None = None        # to the NEXT (coarser) level
+    R: CSR | None = None        # restriction = Pᵀ
+    AP: CSR | None = None       # intermediate Galerkin product (Fig. 21 op)
+    setup_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class Hierarchy:
+    solver: str
+    levels: list[Level]
+    theta: float
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def grid_complexity(self) -> float:
+        return sum(l.A.nrows for l in self.levels) / self.levels[0].A.nrows
+
+    def operator_complexity(self) -> float:
+        return sum(l.A.nnz for l in self.levels) / self.levels[0].A.nnz
+
+    def summary(self) -> str:
+        rows = [f"{self.solver} hierarchy: {self.n_levels} levels, "
+                f"oc={self.operator_complexity():.2f} gc={self.grid_complexity():.2f}"]
+        for i, l in enumerate(self.levels):
+            rows.append(f"  L{i}: n={l.A.nrows:9d} nnz={l.A.nnz:11d} "
+                        f"nnz/row={l.A.nnz / max(l.A.nrows, 1):6.1f}")
+        return "\n".join(rows)
+
+
+def setup(A: CSR, solver: str = "rs", theta: float = 0.25,
+          max_coarse: int = 100, max_levels: int = 25,
+          aggressive: bool = False, prolongation_sweeps: int = 1,
+          seed: int = 42) -> Hierarchy:
+    """Algorithm 1.  ``solver``: "rs" (Ruge-Stüben/HMIS-style) or
+    "sa" (smoothed aggregation, MIS-2 aggregates)."""
+    levels = [Level(A=A)]
+    l = 0
+    while levels[l].A.nrows > max_coarse and l + 1 < max_levels:
+        t0 = time.perf_counter()
+        Al = levels[l].A
+        if solver == "rs":
+            S = classical_strength(Al, theta)                    # strength
+            status = pmis(S, seed=seed + l, aggressive=aggressive)  # splitting
+            if (status == 1).sum() in (0, Al.nrows):
+                break  # coarsening stalled
+            P = direct_interpolation(Al, S, status)              # interpolation
+        elif solver == "sa":
+            S = symmetric_strength(Al, theta)
+            agg = mis2_aggregation(S, seed=seed + l)             # splitting
+            if int(agg.max()) + 1 >= Al.nrows:
+                break
+            T = tentative_prolongator(agg)                       # interpolation
+            P = jacobi_smooth_prolongator(Al, T, sweeps=prolongation_sweeps)
+        else:
+            raise ValueError(f"unknown solver {solver!r}")
+        R = P.T
+        AP = Al.spgemm(P)                                        # Galerkin 1/2
+        Ac = R.spgemm(AP)                                        # Galerkin 2/2
+        Ac = Ac.prune(1e-14)
+        levels[l].P, levels[l].R, levels[l].AP = P, R, AP
+        levels[l].setup_seconds = time.perf_counter() - t0
+        levels.append(Level(A=Ac))
+        if Ac.nrows >= Al.nrows:  # no progress
+            levels.pop()
+            break
+        l += 1
+    return Hierarchy(solver=solver, levels=levels, theta=theta)

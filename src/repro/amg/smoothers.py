@@ -1,0 +1,55 @@
+"""Relaxation methods for the solve phase (Algorithm 2, ``relax``).
+
+Weighted/l1-Jacobi and Chebyshev — the smoothers used at scale in parallel
+AMG (SpMV-only, communication pattern identical to A·x, so every sweep uses
+the level's selected node-aware strategy).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSR
+from .interpolation import estimate_rho_DinvA
+
+
+def jacobi(A: CSR, x: np.ndarray, b: np.ndarray, omega: float = 2.0 / 3.0,
+           iterations: int = 1, dinv: np.ndarray | None = None) -> np.ndarray:
+    if dinv is None:
+        d = A.diagonal()
+        dinv = 1.0 / np.where(d == 0, 1.0, d)
+    for _ in range(iterations):
+        x = x + omega * dinv * (b - A.matvec(x))
+    return x
+
+
+def l1_jacobi(A: CSR, x: np.ndarray, b: np.ndarray, iterations: int = 1) -> np.ndarray:
+    """l1-Jacobi: unconditionally convergent for SPD A."""
+    l1 = np.zeros(A.nrows)
+    np.add.at(l1, A.rows_expanded(), np.abs(A.data))
+    dinv = 1.0 / np.where(l1 == 0, 1.0, l1)
+    for _ in range(iterations):
+        x = x + dinv * (b - A.matvec(x))
+    return x
+
+
+def chebyshev(A: CSR, x: np.ndarray, b: np.ndarray, degree: int = 3,
+              rho: float | None = None, dinv: np.ndarray | None = None) -> np.ndarray:
+    """Chebyshev smoothing on D⁻¹A over [ρ/30, 1.1ρ] (hypre-style)."""
+    if dinv is None:
+        d = A.diagonal()
+        dinv = 1.0 / np.where(d == 0, 1.0, d)
+    rho = rho or estimate_rho_DinvA(A)
+    lmax, lmin = 1.1 * rho, rho / 30.0
+    theta, delta = 0.5 * (lmax + lmin), 0.5 * (lmax - lmin)
+    sigma = theta / delta
+    r = dinv * (b - A.matvec(x))
+    d = r / theta
+    x = x + d
+    rho_prev = 1.0 / sigma
+    for _ in range(degree - 1):
+        rho_k = 1.0 / (2.0 * sigma - rho_prev)
+        r = r - dinv * A.matvec(d)
+        d = (rho_k * rho_prev) * d + (2.0 * rho_k / delta) * r
+        x = x + d
+        rho_prev = rho_k
+    return x

@@ -1,0 +1,106 @@
+"""AMG solve phase (Algorithm 2): V-cycle, stand-alone iteration and PCG.
+
+The smoother is SpMV-based (Jacobi/Chebyshev), so every relaxation sweep,
+residual, restriction and interpolation reuses the level's communication
+pattern — the operations whose strategy the paper's models select.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .csr import CSR
+from .hierarchy import Hierarchy
+from .smoothers import chebyshev, jacobi
+
+
+@dataclasses.dataclass
+class SolveOptions:
+    smoother: str = "jacobi"       # "jacobi" | "chebyshev"
+    presweeps: int = 1
+    postsweeps: int = 1
+    omega: float = 2.0 / 3.0
+    cheby_degree: int = 2
+
+
+def _relax(A: CSR, x, b, opts: SolveOptions, sweeps: int):
+    if sweeps == 0:
+        return x
+    if opts.smoother == "jacobi":
+        return jacobi(A, x, b, omega=opts.omega, iterations=sweeps)
+    return chebyshev(A, x, b, degree=opts.cheby_degree * sweeps)
+
+
+def vcycle(h: Hierarchy, b: np.ndarray, x: np.ndarray | None = None,
+           opts: SolveOptions | None = None, level: int = 0) -> np.ndarray:
+    """One V(pre,post)-cycle (Algorithm 2)."""
+    opts = opts or SolveOptions()
+    lv = h.levels[level]
+    if x is None:
+        x = np.zeros_like(b)
+    if level == h.n_levels - 1:                       # coarsest: direct solve
+        return np.linalg.lstsq(lv.A.to_dense(), b, rcond=None)[0]
+    x = _relax(lv.A, x, b, opts, opts.presweeps)      # pre-relaxation
+    r = b - lv.A.matvec(x)                            # residual
+    rc = lv.R.matvec(r)                               # restrict
+    ec = vcycle(h, rc, None, opts, level + 1)         # coarse-grid solve
+    x = x + lv.P.matvec(ec)                           # interpolate + correct
+    x = _relax(lv.A, x, b, opts, opts.postsweeps)     # post-relaxation
+    return x
+
+
+@dataclasses.dataclass
+class SolveResult:
+    x: np.ndarray
+    residuals: list[float]
+    iterations: int
+    converged: bool
+
+    @property
+    def avg_conv_factor(self) -> float:
+        r = self.residuals
+        if len(r) < 2 or r[0] == 0:
+            return 1.0
+        return (r[-1] / r[0]) ** (1.0 / (len(r) - 1))
+
+
+def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
+          opts: SolveOptions | None = None, x0: np.ndarray | None = None) -> SolveResult:
+    """Stationary AMG iteration: x <- x + V(A, b - Ax)."""
+    A = h.levels[0].A
+    x = np.zeros_like(b) if x0 is None else x0.copy()
+    nb = float(np.linalg.norm(b)) or 1.0
+    res = [float(np.linalg.norm(b - A.matvec(x)))]
+    for it in range(maxiter):
+        if res[-1] / nb < tol:
+            return SolveResult(x, res, it, True)
+        x = vcycle(h, b, x, opts)
+        res.append(float(np.linalg.norm(b - A.matvec(x))))
+    return SolveResult(x, res, maxiter, res[-1] / nb < tol)
+
+
+def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
+        opts: SolveOptions | None = None) -> SolveResult:
+    """AMG-preconditioned conjugate gradients."""
+    A = h.levels[0].A
+    x = np.zeros_like(b)
+    r = b.copy()
+    z = vcycle(h, r, None, opts)
+    p = z.copy()
+    rz = float(r @ z)
+    nb = float(np.linalg.norm(b)) or 1.0
+    res = [float(np.linalg.norm(r))]
+    for it in range(maxiter):
+        if res[-1] / nb < tol:
+            return SolveResult(x, res, it, True)
+        Ap = A.matvec(p)
+        alpha = rz / float(p @ Ap)
+        x += alpha * p
+        r -= alpha * Ap
+        res.append(float(np.linalg.norm(r)))
+        z = vcycle(h, r, None, opts)
+        rz_new = float(r @ z)
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    return SolveResult(x, res, maxiter, res[-1] / nb < tol)

@@ -1,0 +1,21 @@
+"""Core of the paper's contribution: multi-step node-aware communication.
+
+- :mod:`repro.core.topology`      — SMP-node / TPU-pod hierarchical topology
+- :mod:`repro.core.comm_graph`    — who needs which values from whom
+- :mod:`repro.core.schedules`     — standard / NAP-2 / NAP-3 schedules (§3)
+- :mod:`repro.core.perf_model`    — max-rate models, Eqs. (1)–(6) (§3.3)
+- :mod:`repro.core.selector`      — per-operation strategy selection (§4)
+- :mod:`repro.core.simulator`     — rank-faithful host execution (tests/bench)
+- :mod:`repro.core.nap_collectives` — shard_map TPU collectives (flat/NAP)
+"""
+from .comm_graph import CommGraph, VECTOR_BYTES
+from .perf_model import BLUE_WATERS, MACHINES, QUARTZ, TPU_V5E, MachineParams
+from .schedules import STRATEGIES, Schedule, ScheduleStats, build
+from .selector import Selection, select
+from .topology import Partition, Topology
+
+__all__ = [
+    "CommGraph", "VECTOR_BYTES", "BLUE_WATERS", "QUARTZ", "TPU_V5E", "MACHINES",
+    "MachineParams", "STRATEGIES", "Schedule", "ScheduleStats", "build",
+    "Selection", "select", "Partition", "Topology",
+]

@@ -1,0 +1,35 @@
+"""Strategy selection (paper §4, first paragraph).
+
+"Optimal strategies for vector and matrix communication are determined
+during the formation of each matrix in the AMG hierarchy.  After a matrix is
+created, the performance models in Equations 4, 5, and 6 are calculated and
+the strategy with minimum modeled cost is chosen."
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .comm_graph import CommGraph
+from .perf_model import MachineParams, model_time
+from .schedules import STRATEGIES, Schedule, ScheduleStats, build
+
+
+@dataclasses.dataclass
+class Selection:
+    strategy: str
+    schedule: Schedule
+    stats: dict[str, ScheduleStats]     # per strategy
+    times: dict[str, float]            # modeled seconds per strategy
+
+    @property
+    def modeled_time(self) -> float:
+        return self.times[self.strategy]
+
+
+def select(graph: CommGraph, params: MachineParams,
+           strategies: tuple[str, ...] = STRATEGIES) -> Selection:
+    schedules = {s: build(s, graph) for s in strategies}
+    times = {s: model_time(sch, params) for s, sch in schedules.items()}
+    stats = {s: ScheduleStats.of(sch) for s, sch in schedules.items()}
+    best = min(times, key=times.get)
+    return Selection(strategy=best, schedule=schedules[best], stats=stats, times=times)

@@ -1,0 +1,28 @@
+"""Public jit'd wrapper: layout conversion + kernel/oracle dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              use_kernel: bool = True, block_q: int = 128, block_k: int = 128,
+              interpret: bool | None = None):
+    """q: [B, S, Hq, D]; k, v: [B, S, Hkv, D] (time-major like the models).
+
+    Returns [B, S, Hq, D].
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if not use_kernel:
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for the ELL SpMV kernel with oracle fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ell_spmv_ref
+from .spmv import ell_spmv
+
+
+def spmv(cols, vals, x, *, use_kernel: bool = True, block_rows: int = 256,
+         interpret: bool | None = None):
+    """ELL SpMV.  ``interpret=None`` → interpret on CPU, compiled on TPU."""
+    if not use_kernel:
+        return ell_spmv_ref(cols, vals, x)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ell_spmv(cols, vals, x, block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the ELL SpMV kernel."""
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = Σ_k vals[i,k] · x[cols[i,k]]   (cols == -1 are padding).
+
+    cols: [n, K] int32, vals: [n, K], x: [m] — m covers every valid col id.
+    """
+    safe = jnp.maximum(cols, 0)
+    contrib = jnp.where(cols >= 0, vals * x[safe], 0.0)
+    return contrib.sum(axis=1)

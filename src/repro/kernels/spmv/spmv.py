@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: row-blocked ELL SpMV.
+
+TPU adaptation of the paper's SpMV hot loop (DESIGN.md §2).  The sparse
+matrix is stored in ELL (fixed K nonzeros per padded row) — the layout the
+distributed solve path already uses, and a gather-friendly layout for the
+VPU.  Tiling:
+
+  * grid over row blocks; per step the kernel sees a (BLOCK_ROWS, K) tile of
+    column ids + values in VMEM,
+  * the source vector ``x`` is resident in VMEM for every step (BlockSpec
+    with a constant index_map): AMG level vectors after partitioning are
+    ≤ a few hundred KB per device, far under the ~16 MB v5e VMEM budget,
+  * gather x[cols] + multiply-accumulate over K on the VPU (8×128 lanes);
+    rows are padded to a multiple of 8 and K left at its natural size.
+
+An MXU/BCSR variant (dense 128×128 blocks fed to the systolic array) is the
+natural next step for matrices with block structure; the AMG stencil
+matrices here are scalar, so the VPU gather form is the right first target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]          # (BLOCK_ROWS, K) int32
+    vals = vals_ref[...]          # (BLOCK_ROWS, K)
+    x = x_ref[...]                # (m,) resident vector
+    safe = jnp.maximum(cols, 0)
+    gathered = jnp.take(x, safe, axis=0)          # VPU gather
+    contrib = jnp.where(cols >= 0, vals * gathered, 0.0)
+    y_ref[...] = contrib.sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ell_spmv(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray,
+             block_rows: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """y = A·x with A in padded ELL form (cols==-1 padding)."""
+    n, k = cols.shape
+    br = min(block_rows, max(8, n))
+    pad = (-n) % br
+    if pad:
+        cols = jnp.pad(cols, ((0, pad), (0, 0)), constant_values=-1)
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    grid = (cols.shape[0] // br,)
+    y = pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),  # x resident
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cols.shape[0],), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)
+    return y[:n]

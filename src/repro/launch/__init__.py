@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline extraction,
+training / serving drivers."""

@@ -1,0 +1,383 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell on placeholder devices and extract roofline inputs.
+
+MUST be the very first two lines (before any jax-importing module): the
+host-device count locks on first jax init."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, cells, get_arch, get_shape  # noqa: E402
+from ..models.model import decode_step, forward  # noqa: E402
+from ..train.optimizer import AdamWConfig  # noqa: E402
+from ..train.sharding import (batch_specs, cache_specs, named,  # noqa: E402
+                              param_specs, zero1_opt_specs)
+from ..train.train_step import TrainOptions, make_step_fn  # noqa: E402
+from .mesh import dp_axes_of, make_production_mesh, pod_size_of  # noqa: E402
+from .roofline import collective_bytes_from_text, roofline_terms  # noqa: E402
+from .specs import (abstract_opt_state, abstract_params, input_specs,  # noqa: E402
+                    model_flops)
+
+# per-arch microbatch counts for train_4k (keep per-device live tokens sane)
+TRAIN_MICROBATCHES = {
+    "mixtral-8x22b": 8, "qwen3-moe-235b-a22b": 16, "starcoder2-7b": 8,
+    "recurrentgemma-9b": 16, "phi-3-vision-4.2b": 4, "musicgen-medium": 4,
+    "qwen3-1.7b": 4, "qwen2-0.5b": 4, "qwen1.5-0.5b": 4, "xlstm-125m": 2,
+}
+
+# production cell options found by the §Perf hillclimb (EXPERIMENTS.md)
+PROD_CELL_OPTS = {
+    ("qwen3-moe-235b-a22b", "train_4k"): {
+        "extra_opts": {"sp_residual": True, "loss_chunk": 256,
+                       "bf16_moments": True}},
+    ("qwen3-moe-235b-a22b", "prefill_32k"): {
+        "extra_opts": {"sp_residual": True}},
+    ("mixtral-8x22b", "train_4k"): {
+        "extra_opts": {"sp_residual": True, "loss_chunk": 256,
+                       "bf16_moments": True}},
+    ("mixtral-8x22b", "prefill_32k"): {
+        "extra_opts": {"sp_residual": True}},
+    ("qwen2-0.5b", "train_4k"): {"sp_attn": True,
+                                 "extra_opts": {"loss_chunk": 256}},
+    ("musicgen-medium", "train_4k"): {"sp_attn": True},
+    ("starcoder2-7b", "train_4k"): {"sp_attn": True},
+}
+
+
+def _dp_for(shape, mesh):
+    dp = dp_axes_of(mesh)
+    if shape.global_batch == 1:
+        return ()                      # long_500k: nothing to shard on batch
+    return dp
+
+
+def build_cell(arch_name: str, shape_name: str, mesh, *, zero1: bool = True,
+               microbatches: int | None = None, use_kernel: bool = False,
+               extra_opts: dict | None = None, cfg_override=None,
+               unroll: bool = False, sp_attn: bool = False):
+    """Returns (lowered, meta) for one cell.  ``sp_attn`` turns on
+    sequence-parallel attention (activation-sharding context)."""
+    import contextlib
+
+    from ..models.act_sharding import activation_sharding
+    cfg = cfg_override if cfg_override is not None else get_arch(arch_name)
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        raise ValueError("cell is skipped per DESIGN.md §5")
+    dp = _dp_for(shape, mesh)
+    ctx_kw = {}
+    extra_opts = dict(extra_opts or {})
+    sp_residual = extra_opts.pop("sp_residual", False) and \
+        shape.kind in ("train", "prefill")
+    if sp_residual:
+        ctx_kw.update(residual_spec=P(dp if dp else None, "model", None))
+    if sp_attn:
+        dpa = dp if dp else None
+        ctx_kw.update(qkv_spec=P(dpa, "model", None, None),
+                      kv_spec=P(dpa, None, None, None),
+                      out_spec=P(dpa, None, None))
+    model_size = mesh.shape["model"]
+    # shard_map expert parallelism when experts divide the data axis
+    ep_axis, ep_size = None, 1
+    if cfg.is_moe and cfg.n_experts % mesh.shape["data"] == 0 and not \
+            extra_opts.pop("no_moe_ep", False):
+        ep_axis, ep_size = "data", mesh.shape["data"]
+        ctx_kw.update(moe_ep=dict(
+            mesh=mesh, dp_axes=dp, ep_axes=("data",), tp_axis="model",
+            nap=False, seq_axis="model" if sp_residual else None))
+    elif cfg.is_moe:
+        # TP-MoE (mixtral): dispatch buffer capacity dim sharded over dp
+        ctx_kw.update(moe_buf_spec=P(None, dp if dp else None, "model"))
+    sp_ctx = activation_sharding(**ctx_kw) if ctx_kw else \
+        contextlib.nullcontext()
+    params_abs = abstract_params(cfg)
+    pspecs = param_specs(cfg, params_abs, "model", model_size,
+                         ep_axis=ep_axis, ep_size=ep_size)
+    p_sh = named(mesh, pspecs)
+    meta = {"arch": arch_name, "shape": shape_name,
+            "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+            "n_devices": int(mesh.devices.size),
+            "model_flops": model_flops(cfg, shape)}
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else \
+            TRAIN_MICROBATCHES.get(arch_name, 1)
+        if len(dp) == 2:
+            mb = max(1, mb // 2)       # twice the dp shards in multi-pod
+        bf16_mom = extra_opts.pop("bf16_moments", False)
+        opts = TrainOptions(remat=True, microbatches=mb, use_kernel=use_kernel,
+                            dp_axes=dp, unroll=unroll, zero2=zero1,
+                            **(extra_opts or {}))
+        acfg = AdamWConfig()
+        opt_abs = abstract_opt_state(
+            params_abs,
+            moment_dtype=jnp.bfloat16 if bf16_mom else jnp.float32)
+        o_specs = zero1_opt_specs(pspecs, opt_abs, dp, mesh) if zero1 else \
+            {"m": pspecs, "v": pspecs, "count": P()}
+        step = make_step_fn(cfg, acfg, opts,
+                            grad_spec_tree=o_specs["m"] if zero1 else None)
+        o_sh = named(mesh, o_specs)
+        b_sh = {k: NamedSharding(mesh, v) for k, v in
+                batch_specs(cfg, dp, embeds=not cfg.embed_input).items()}
+        batch_abs = input_specs(cfg, shape)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     donate_argnums=(0, 1))
+        with mesh, sp_ctx:
+            lowered = fn.lower(params_abs, opt_abs, batch_abs)
+        meta["microbatches"] = mb
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens):
+            logits, caches = forward(params, cfg, tokens, return_cache=True,
+                                     use_kernel=use_kernel, unroll=unroll)
+            return logits[:, -1], caches
+
+        b_in = input_specs(cfg, shape)["inputs"]
+        in_sh = NamedSharding(mesh, P(dp if dp else None, *([None] * (len(b_in.shape) - 1))))
+        fn = jax.jit(prefill, in_shardings=(p_sh, in_sh))
+        with mesh, sp_ctx:
+            lowered = fn.lower(params_abs, b_in)
+        return lowered, meta
+
+    # decode
+    specs = input_specs(cfg, shape)
+    g_spec, e_spec = cache_specs(cfg, dp if dp else None, "model")
+    cache_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), g_spec,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), e_spec,
+                             is_leaf=lambda x: isinstance(x, P)))
+    tok_sh = NamedSharding(
+        mesh, P(dp if dp else None, *([None] * (len(specs["inputs"].shape) - 1))))
+
+    def serve_step(params, tokens, cache, pos):
+        return decode_step(params, cfg, tokens, cache, pos, unroll=unroll)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, tok_sh, cache_sh,
+                               NamedSharding(mesh, P())),
+                 donate_argnums=(2,))
+    scores_ctx = activation_sharding(
+        scores_spec=P(dp if dp else None, None, None, None, None),
+        q5_spec=P(dp if dp else None, None, None, None, "model"))
+    with mesh, sp_ctx, scores_ctx:
+        lowered = fn.lower(params_abs, specs["inputs"], specs["cache"],
+                           specs["pos"])
+    return lowered, meta
+
+
+def _compile_cell(arch_name, shape_name, mesh, pod_size, **kw):
+    t0 = time.perf_counter()
+    lowered, meta = build_cell(arch_name, shape_name, mesh, **kw)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        peak = getattr(mem, "temp_size_in_bytes", 0) + \
+            getattr(mem, "argument_size_in_bytes", 0) + \
+            getattr(mem, "output_size_in_bytes", 0) - \
+            getattr(mem, "alias_size_in_bytes", 0)
+        memd = {"temp": getattr(mem, "temp_size_in_bytes", None),
+                "args": getattr(mem, "argument_size_in_bytes", None),
+                "output": getattr(mem, "output_size_in_bytes", None),
+                "alias": getattr(mem, "alias_size_in_bytes", None),
+                "peak_per_device": peak}
+    except Exception as e:  # CPU backend may not support it
+        memd = {"error": str(e)}
+    coll = collective_bytes_from_text(compiled.as_text(), pod_size=pod_size,
+                                      n_devices=int(mesh.devices.size))
+    meta.update({"lower_s": round(t1 - t0, 2),
+                 "compile_s": round(t2 - t1, 2)})
+    return {"cost": cost, "coll": coll, "mem": memd, "meta": meta}
+
+
+def run_cell(arch_name, shape_name, multi_pod=False, verbose=True,
+             zero1=True, microbatches=None, **kw):
+    """One cell = production-form compile (memory + proof) + two shallow
+    unrolled compiles (1 and 2 pattern-groups) whose exact per-group costs
+    extrapolate linearly to full depth (scan bodies are cost-counted once by
+    XLA, so the production form cannot be used for FLOP/collective counts)."""
+    import dataclasses
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pod_size = pod_size_of(mesh)
+    cfg = get_arch(arch_name)
+    plen = len(cfg.pattern)
+    G, extra = cfg.n_layers // plen, cfg.n_layers % plen
+
+    # 1) production scan form — THE dry-run proof + memory analysis
+    prod = _compile_cell(arch_name, shape_name, mesh, pod_size, zero1=zero1,
+                         microbatches=microbatches, unroll=False, **kw)
+    meta = prod["meta"]
+    meta["memory_analysis"] = prod["mem"]
+
+    # 2) shallow unrolled cost probes: g=1 and g=2 pattern-groups
+    probes = []
+    for g in (1, 2):
+        sub = dataclasses.replace(cfg, n_layers=g * plen + extra)
+        r = _compile_cell(arch_name, shape_name, mesh, pod_size,
+                          cfg_override=sub, zero1=zero1, microbatches=1,
+                          unroll=True, **kw)
+        probes.append(r)
+
+    def xq(f):
+        q1, q2 = f(probes[0]), f(probes[1])
+        return q1 + (G - 1) * (q2 - q1)
+
+    flops = xq(lambda r: float(r["cost"].get("flops", 0.0)))
+    hbytes = xq(lambda r: float(r["cost"].get("bytes accessed", 0.0)))
+    cbytes = xq(lambda r: r["coll"]["total_bytes"])
+    xbytes = xq(lambda r: r["coll"]["cross_slow_bytes"])
+    ncoll = xq(lambda r: r["coll"]["n_collectives"])
+    cost = {"flops": flops, "bytes accessed": hbytes}
+    # train probes run mb=1 over the full batch: totals already per step
+    terms = roofline_terms(cost, "", n_chips=meta["n_devices"],
+                           pod_size=pod_size,
+                           model_flops=meta["model_flops"])
+    terms.coll_bytes = cbytes
+    terms.cross_pod_bytes = xbytes
+    from .roofline import DCI_BW, ICI_LINKS, ICI_LINK_BW
+    terms.collective_s = cbytes / (ICI_LINKS * ICI_LINK_BW)
+    terms.cross_pod_s = xbytes / DCI_BW
+    from .roofline import HBM_BW
+    from .specs import analytic_memory_floor
+    floor = analytic_memory_floor(cfg, get_shape(shape_name),
+                                  meta["n_devices"])
+    meta["memory_floor_bytes_per_dev"] = floor
+    meta["memory_floor_s"] = floor / HBM_BW
+    meta.update({
+        "hlo_flops_per_dev": terms.hlo_flops,
+        "hlo_bytes_per_dev": terms.hlo_bytes,
+        "coll_bytes_per_dev": cbytes,
+        "cross_pod_bytes_per_dev": xbytes,
+        "n_collectives": ncoll,
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "cross_pod_s": terms.cross_pod_s,
+        "dominant": terms.dominant,
+        "useful_flops_fraction": terms.useful_flops_fraction,
+        "roofline_fraction": terms.roofline_fraction,
+        "probe_compile_s": [p["meta"]["compile_s"] for p in probes],
+    })
+    if verbose:
+        peak = meta["memory_analysis"].get("peak_per_device")
+        peak_str = f"{peak / 2**30:.2f} GiB" if peak else "n/a"
+        print(f"[dryrun] {arch_name} × {shape_name} × {meta['mesh']}: "
+              f"compile {meta['compile_s']}s, peak/dev {peak_str}, "
+              f"dominant={meta['dominant']}, "
+              f"roofline={meta['roofline_fraction']:.3f}", flush=True)
+    return meta
+
+
+def run_amg_cell(multi_pod=True, n=24, strategies=("standard", "nap2", "nap3"),
+                 verbose=True):
+    """The paper's own workload on the production mesh: distributed SpMV
+    halo exchange for a 3D Laplacian, per strategy — lower + compile on
+    (2, 256) pods × lanes and report pod-crossing collective bytes."""
+    import numpy as np
+
+    from ..amg.dist_spmv import build_dist_spmv
+    from ..amg.problems import laplace_3d
+
+    n_pods = 2 if multi_pod else 1
+    lanes = 256
+    mesh = jax.make_mesh((n_pods, lanes), ("pod", "lane"))
+    A = laplace_3d(n)
+    out = []
+    for strat in strategies:
+        t0 = time.perf_counter()
+        sp = build_dist_spmv(A, n_pods, lanes, strat, mesh=mesh)
+        x = sp.scatter_x(np.ones(A.nrows))
+        lowered = jax.jit(sp.fn).lower(x)
+        compiled = lowered.compile()
+        coll = collective_bytes_from_text(compiled.as_text(), pod_size=lanes,
+                                          n_devices=n_pods * lanes)
+        meta = {"arch": f"amg_spmv_{strat}", "shape": f"laplace3d_n{n}",
+                "mesh": f"{n_pods}x{lanes}", "n_devices": n_pods * lanes,
+                "compile_s": round(time.perf_counter() - t0, 2),
+                "coll_bytes_per_dev": coll["total_bytes"],
+                "cross_pod_bytes_per_dev": coll["cross_slow_bytes"],
+                "n_collectives": coll["n_collectives"]}
+        out.append(meta)
+        if verbose:
+            print(f"[dryrun] AMG spmv {strat} × {meta['mesh']}: "
+                  f"coll={coll['total_bytes']:.3e} B "
+                  f"xpod={coll['cross_slow_bytes']:.3e} B", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--amg", action="store_true",
+                    help="run the AMG distributed-SpMV cell instead")
+    args = ap.parse_args()
+
+    if args.amg:
+        results = []
+        if os.path.exists(args.out):
+            results = json.load(open(args.out))
+        results = [r for r in results
+                   if not str(r.get("arch", "")).startswith("amg_spmv")]
+        results.extend(run_amg_cell(multi_pod=True))
+        json.dump(results, open(args.out, "w"), indent=1)
+        print(f"[dryrun] wrote {args.out}")
+        return
+
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    todo = []
+    if args.all:
+        for a, s, skip in cells():
+            if skip:
+                results = [r for r in results if not (
+                    r["arch"] == a.name and r["shape"] == s.name)]
+                results.append({"arch": a.name, "shape": s.name,
+                                "mesh": "all", "skipped": skip})
+                continue
+            for mp in ((False, True) if args.both_meshes else
+                       (args.multi_pod,)):
+                todo.append((a.name, s.name, mp))
+    else:
+        for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+            todo.append((args.arch, args.shape, mp))
+
+    for a, s, mp in todo:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        if (a, s, mesh_tag) in done:
+            print(f"[dryrun] skip cached {a} × {s} × {mesh_tag}")
+            continue
+        try:
+            kw = {k: (dict(v) if isinstance(v, dict) else v)
+                  for k, v in PROD_CELL_OPTS.get((a, s), {}).items()}
+            meta = run_cell(a, s, multi_pod=mp, zero1=not args.no_zero1, **kw)
+        except Exception as e:
+            meta = {"arch": a, "shape": s, "mesh": mesh_tag,
+                    "error": f"{type(e).__name__}: {e}"}
+            print(f"[dryrun] FAIL {a} × {s} × {mesh_tag}: {meta['error']}")
+        results.append(meta)
+        json.dump(results, open(args.out, "w"), indent=1)
+    print(f"[dryrun] wrote {args.out} ({len(results)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh definition (FUNCTION, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi-pod = 2 pods = 512 chips.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod —
+    "pod" is the paper's expensive inter-node domain (DCI), "data"/"model"
+    live on intra-pod ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def pod_size_of(mesh) -> int:
+    """Devices per pod (for pod-crossing collective classification)."""
+    n = mesh.devices.size
+    return n // mesh.shape["pod"] if "pod" in mesh.axis_names else n

@@ -1,0 +1,194 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs        / (chips × 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes        / (chips × 819e9  B/s HBM)
+    collective = collective_bytes / (chips × 50e9   B/s per ICI link)
+
+``cost_analysis()`` supplies FLOPs / bytes-accessed of the *per-device*
+partitioned module (verified in tests), so the numerators are multiplied by
+``chips`` before the division — i.e. terms reduce to per-device work over
+per-device rates.  Collective bytes are NOT in cost_analysis: we parse the
+compiled HLO and sum result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op,
+classifying pod-crossing groups via the device-id → pod map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# -------------------------- TPU v5e hardware constants (target machine)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_LINK_BW = 50e9                # B/s per link
+ICI_LINKS = 4                     # links per chip available to collectives
+DCI_BW = 6.4e9                    # B/s per chip, pod-crossing (modeled)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>\(?[^=]*?\)?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)"
+    r"(?P<suffix>-start|-done)?\(", )
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _shape_bytes(shapes_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str) -> list[list[int]] | None:
+    m = _IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = np.transpose(ids, perm)
+        return ids.reshape(g, s).tolist()
+    m = _GROUPS_RE.search(line)
+    if m:
+        body = m.group(1)
+        groups = []
+        for grp in re.findall(r"\{([\d, ]*)\}", "{" + body + "}"):
+            if grp.strip():
+                groups.append([int(x) for x in grp.replace(" ", "").split(",")])
+        return groups or None
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveInfo:
+    op: str
+    bytes: float            # result-shape bytes (per participating device)
+    crosses_pod: bool
+    group_size: int
+
+
+def parse_collectives(hlo_text: str, pod_size: int | None = None,
+                      n_devices: int | None = None) -> list[CollectiveInfo]:
+    out: list[CollectiveInfo] = []
+    for line in hlo_text.splitlines():
+        mm = _COLL_RE.search(line)
+        if not mm:
+            continue
+        # avoid double counting async -start/-done pairs: skip -done lines
+        if mm.group("suffix") == "-done":
+            continue
+        b = _shape_bytes(mm.group("shapes"))
+        groups = _parse_groups(line)
+        cross = False
+        gsize = 0
+        if groups:
+            gsize = max(len(g) for g in groups)
+            if pod_size:
+                for g in groups:
+                    pods = {d // pod_size for d in g}
+                    if len(pods) > 1:
+                        cross = True
+                        break
+            else:
+                cross = gsize > 1
+        else:
+            # empty replica_groups == all devices participate
+            gsize = n_devices or 0
+            cross = bool(pod_size and n_devices and n_devices > pod_size)
+        out.append(CollectiveInfo(op=mm.group("op"), bytes=b,
+                                  crosses_pod=cross, group_size=gsize))
+    return out
+
+
+def collective_bytes_from_text(hlo_text: str, pod_size: int | None = None,
+                               n_devices: int | None = None) -> dict:
+    infos = parse_collectives(hlo_text, pod_size=pod_size, n_devices=n_devices)
+    return {
+        "total_bytes": sum(i.bytes for i in infos),
+        "cross_slow_bytes": sum(i.bytes for i in infos if i.crosses_pod),
+        "n_collectives": len(infos),
+        "n_cross": sum(1 for i in infos if i.crosses_pod),
+        "by_op": {op: sum(i.bytes for i in infos if i.op == op)
+                  for op in {i.op for i in infos}},
+    }
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All terms in seconds (per executed step, per device timeline)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    cross_pod_s: float
+    hlo_flops: float          # per device
+    hlo_bytes: float          # per device
+    coll_bytes: float         # per device
+    cross_pod_bytes: float
+    model_flops: float        # 6·N·D (or 6·N_active·D) — global useful FLOPs
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": max(self.collective_s, self.cross_pod_s)}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s,
+                   self.cross_pod_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/redundancy waste."""
+        tot = self.hlo_flops * self.n_chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at its
+        bound: (model-useful compute time) / (achievable step time)."""
+        ideal = self.model_flops / (self.n_chips * PEAK_FLOPS_BF16)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+
+def roofline_terms(cost: dict, hlo_text: str, n_chips: int, pod_size: int,
+                   model_flops: float) -> RooflineTerms:
+    """cost = compiled.cost_analysis() of the per-device module."""
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_text(hlo_text, pod_size=pod_size)
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll["total_bytes"] / (ICI_LINKS * ICI_LINK_BW),
+        cross_pod_s=coll["cross_slow_bytes"] / DCI_BW,
+        hlo_flops=flops,
+        hlo_bytes=hbm,
+        coll_bytes=coll["total_bytes"],
+        cross_pod_bytes=coll["cross_slow_bytes"],
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)
+and MODEL_FLOPS accounting for the roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.model import init_cache, init_params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def abstract_opt_state(params_shape, moment_dtype=jnp.float32):
+    from ..train.optimizer import init_opt_state
+    return jax.eval_shape(
+        lambda p: init_opt_state(p, moment_dtype=moment_dtype), params_shape)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """Stand-ins for the step inputs of this (arch × shape) cell.
+
+    train   → {"inputs", "targets"} for train_step
+    prefill → tokens/embeddings [B, S]
+    decode  → (tokens [B,1], cache pytree, pos) for serve_step
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_input:
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        emb = None
+    else:
+        # stub modality frontend: precomputed frame/patch embeddings
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        emb = True
+    if shape.kind == "train":
+        return {"inputs": tok(B, S),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"inputs": tok(B, S)}
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, B, S, dtype))
+        return {"inputs": tok(B, 1), "cache": cache,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def analytic_memory_floor(cfg: ArchConfig, shape: ShapeConfig,
+                          n_chips: int) -> float:
+    """Per-chip HBM bytes a well-fused implementation must move per step —
+    a LOWER bound companion to cost_analysis' unfused 'bytes accessed'."""
+    P = float(cfg.n_params())
+    Pa = float(cfg.n_active_params())
+    tokens = shape.global_batch * shape.seq_len
+    d, L = cfg.d_model, cfg.n_layers
+    if shape.kind == "train":
+        # params: bf16 read fwd + bwd-recompute read + f32 grad write +
+        # f32 m/v read+write (ZeRO sharded → /chips like params)
+        param_traffic = P * (2 + 2 + 4 + 16)
+        act = tokens * d * L * 40.0          # ~40B/token/layer fused fwd+bwd
+        return (param_traffic + act) / n_chips
+    if shape.kind == "prefill":
+        return (Pa * 2 + tokens * d * L * 20.0) / n_chips
+    # decode: read all active params + the KV cache once per token
+    clen = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+    kv = (shape.global_batch * clen * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+          * sum(1 for k in cfg.pattern if k == "attn") * L // len(cfg.pattern))
+    return (Pa * 2 + kv) / n_chips
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N·D (train) / 2·N·D (inference), N = active params, D = tokens."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch           # decode: one token each

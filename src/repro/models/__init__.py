@@ -1,0 +1,4 @@
+"""LM substrate: layers, attention, MoE, recurrent blocks, model assembly."""
+from .model import (decode_step, forward, init_cache, init_params, loss_fn)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn"]

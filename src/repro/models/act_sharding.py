@@ -1,0 +1,88 @@
+"""Trace-time activation-sharding context (sequence-parallel attention).
+
+For architectures whose head counts don't divide the model axis (qwen2 14H,
+musicgen 24H, starcoder2 36H…), attention projections are replicated
+(sharding.py) — attention compute/bytes are then duplicated model_size×.
+Sequence parallelism fixes this: queries are sharded along S over the model
+axis (each device attends its query chunk against the full K/V), and the
+block output is resharded back for the TP FFN.
+
+Used as:
+    with activation_sharding(qkv_spec=P(dp, "model", None, None),
+                             kv_spec=P(dp, None, None, None),
+                             out_spec=P(dp, None, None)):
+        lowered = jit(step).lower(...)
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_CTX: dict = {"qkv_spec": None, "kv_spec": None, "out_spec": None,
+              "scores_spec": None, "q5_spec": None, "moe_ep": None,
+              "residual_spec": None, "moe_buf_spec": None}
+
+
+@contextlib.contextmanager
+def activation_sharding(**kw):
+    old = dict(_CTX)
+    _CTX.update(kw)
+    try:
+        yield
+    finally:
+        _CTX.clear()
+        _CTX.update(old)
+
+
+def constrain_q(q):
+    if _CTX["qkv_spec"] is not None:
+        return jax.lax.with_sharding_constraint(q, _CTX["qkv_spec"])
+    return q
+
+
+def constrain_kv(k, v):
+    if _CTX["kv_spec"] is not None:
+        return (jax.lax.with_sharding_constraint(k, _CTX["kv_spec"]),
+                jax.lax.with_sharding_constraint(v, _CTX["kv_spec"]))
+    return k, v
+
+
+def constrain_out(x):
+    if _CTX["out_spec"] is not None:
+        return jax.lax.with_sharding_constraint(x, _CTX["out_spec"])
+    return x
+
+
+def constrain_moe_buf(buf):
+    """TP-MoE dispatch buffer [E, cap, d]: shard the capacity dim over dp so
+    the buffer never replicates across the data axis."""
+    if _CTX["moe_buf_spec"] is not None:
+        return jax.lax.with_sharding_constraint(buf, _CTX["moe_buf_spec"])
+    return buf
+
+
+def constrain_residual(x):
+    """Residual stream between blocks [B,S,d]: sharding S over the model
+    axis (Megatron-SP) shrinks the per-layer remat carries the backward
+    scan must store — the dominant memory at large layer counts."""
+    if _CTX["residual_spec"] is not None:
+        return jax.lax.with_sharding_constraint(x, _CTX["residual_spec"])
+    return x
+
+
+def constrain_q5(q5):
+    """Decode query [B,1,Hkv,g,dh]: reshard the (tiny) q to the cache's
+    head_dim sharding so the giant cache operand never moves."""
+    if _CTX["q5_spec"] is not None:
+        return jax.lax.with_sharding_constraint(q5, _CTX["q5_spec"])
+    return q5
+
+
+def constrain_scores(s):
+    """Decode attention scores [B,Hkv,g,1,S]: replicate over the model axis
+    so the dh contraction completes with a psum instead of SPMD resharding
+    (= all-gathering) the cache."""
+    if _CTX["scores_spec"] is not None:
+        return jax.lax.with_sharding_constraint(s, _CTX["scores_spec"])
+    return s

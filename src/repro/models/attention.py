@@ -1,0 +1,160 @@
+"""GQA attention block: RoPE, qk-norm, QKV bias, sliding window, KV cache.
+
+Dense einsum path by default (XLA counts its FLOPs in the dry-run); the
+Pallas flash kernel is switched in via ``use_kernel`` for TPU runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import attention as flash_ops
+from ..kernels.flash_attention.ref import attention_ref
+from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_params
+
+
+def attn_params(key, cfg, dtype):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (d, hq * dh), dtype),
+        "wk": dense_init(ks[1], d, (d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], d, (d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], hq * dh, (hq * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_params(dh, dtype)
+        p["k_norm"] = rmsnorm_params(dh, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, causal=True, window=None, chunk=1024,
+                      unroll=False):
+    """Flash-style attention in pure XLA: online softmax over KV chunks.
+
+    q,k,v: [B,S,H(q/kv),D] time-major.  Never materializes the S×S score
+    matrix — peak transient is [B,H,S,chunk].  ``unroll`` unrolls the chunk
+    scan (dry-run cost accounting)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    ck = min(chunk, s)
+    pad = (-s) % ck
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // ck
+    scale = d ** -0.5
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)          # [B,Hq,S,D]
+    kc = k.reshape(b, nc, ck, hkv, d).transpose(1, 0, 3, 2, 4)  # [nc,B,Hkv,ck,D]
+    vc = v.reshape(b, nc, ck, hkv, d).transpose(1, 0, 3, 2, 4)
+    qpos = jnp.arange(s)[None, None, :, None]                  # [1,1,S,1]
+
+    def step(carry, xs):
+        acc, m, l, ci = carry
+        kch, vch = xs                                          # [B,Hkv,ck,D]
+        kch = jnp.repeat(kch.astype(jnp.float32), group, axis=1)
+        vch = jnp.repeat(vch.astype(jnp.float32), group, axis=1)
+        sc = jnp.einsum("bhqd,bhkd->bhqk", qf, kch) * scale
+        kpos = (ci * ck + jnp.arange(ck))[None, None, None, :]
+        mask = kpos < s
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        sc = jnp.where(mask, sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        pexp = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", pexp, vch)
+        return (acc, m_new, l, ci + 1), None
+
+    acc0 = jnp.zeros((b, hq, s, d), jnp.float32)
+    m0 = jnp.full((b, hq, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, s), jnp.float32)
+    # checkpoint the chunk step: backward recomputes per-chunk scores
+    # (flash-attention backward) instead of saving every [B,H,S,ck] tensor
+    (acc, m, l, _), _ = jax.lax.scan(jax.checkpoint(step),
+                                     (acc0, m0, l0, jnp.int32(0)),
+                                     (kc, vc), unroll=nc if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)           # [B,S,Hq,D]
+
+
+def attn_forward(p, cfg, x, positions, window=None, use_kernel: bool = False,
+                 unroll: bool = False, chunk: int = 1024):
+    """Full-sequence attention (train / prefill).  x: [B, S, d]."""
+    from .act_sharding import constrain_kv, constrain_out, constrain_q
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain_q(q)              # sequence-parallel attention (optional)
+    k, v = constrain_kv(k, v)
+    win = window if window is not None else cfg.window
+    s = x.shape[1]
+    if use_kernel:
+        out = flash_ops(q, k, v, causal=True, window=win, use_kernel=True)
+    elif s > chunk:
+        out = chunked_attention(q, k, v, causal=True, window=win,
+                                chunk=chunk, unroll=unroll)
+    else:
+        out = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            window=win).transpose(0, 2, 1, 3)
+    b, s = x.shape[:2]
+    out = constrain_out(out.reshape(b, s, -1))
+    return out @ p["wo"], (k, v)
+
+
+def attn_decode(p, cfg, x, cache_k, cache_v, pos):
+    """One-token decode with static-shape KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, Dh]; pos: [] int32 (tokens so
+    far).  Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)
+    posn = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posn, cfg.rope_theta)
+    k = apply_rope(k, posn, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    s_max = cache_k.shape[1]
+    group = cfg.n_heads // cfg.n_kv_heads
+    kx = jnp.repeat(cache_k, group, axis=2)      # [B, S, Hq, Dh]
+    vx = jnp.repeat(cache_v, group, axis=2)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s_max)[None, None, None, :]
+    mask = kpos <= pos
+    if cfg.window is not None:
+        mask &= kpos > pos - cfg.window
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vx.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, -1)
+    return out @ p["wo"], cache_k, cache_v

@@ -1,0 +1,86 @@
+"""Shared neural-net layers (functional, pytree params, no framework)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, fan_in, shape, dtype):
+    return normal_init(key, shape, fan_in ** -0.5, dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_params, rmsnorm
+    return layernorm_params, layernorm
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: [B, S, H, D]; positions: [B, S] (or [S])."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlp
+def mlp_params(key, d_model, d_ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, (d_ff, d_model), dtype)}
+    if act in ("silu", "geglu"):   # gated: two up projections
+        p["gate"] = dense_init(k1, d_model, (d_model, d_ff), dtype)
+        p["up"] = dense_init(k3, d_model, (d_model, d_ff), dtype)
+    else:                          # plain gelu MLP
+        p["up"] = dense_init(k1, d_model, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(p, x, act: str):
+    if act in ("silu", "geglu"):
+        g = x @ p["gate"]
+        u = x @ p["up"]
+        h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]

@@ -1,0 +1,339 @@
+"""Model assembly: pattern-grouped blocks, scan-over-groups, KV/recurrent
+caches, train forward + loss, and single-token decode.
+
+Layer structure = ``cfg.pattern`` repeated; a *group* is one pattern period.
+Groups are identical pytrees → stacked and driven by ``lax.scan`` (small HLO,
+fast 512-device compiles).  ``n_layers % len(pattern)`` remainder blocks are
+applied unrolled after the scan (e.g. recurrentgemma-9b's trailing 2 rec
+blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_decode, attn_forward, attn_params
+from .layers import make_norm, mlp, mlp_params, normal_init
+from .moe import moe_ffn_tp, moe_params
+from .ssm import (mlstm_decode, mlstm_forward, mlstm_params, rglru_decode,
+                  rglru_forward, rglru_params, slstm_decode, slstm_forward,
+                  slstm_params)
+
+
+def _has_ffn(cfg, kind: str) -> bool:
+    return cfg.d_ff > 0 or (cfg.is_moe and kind == "attn")
+
+
+# ------------------------------------------------------------------ blocks
+def block_init(key, cfg, kind: str, dtype):
+    norm_params, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 2)
+    core = {"attn": attn_params, "mlstm": mlstm_params, "slstm": slstm_params,
+            "rglru": rglru_params}[kind](ks[0], cfg, dtype)
+    p = {"ln1": norm_params(cfg.d_model, dtype), "core": core}
+    if _has_ffn(cfg, kind):
+        p["ln2"] = norm_params(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["ffn"] = moe_params(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _ffn_apply(p, cfg, x):
+    if cfg.is_moe:
+        from .act_sharding import _CTX
+        ep = _CTX.get("moe_ep")
+        if ep is not None:
+            from .moe import moe_ep_shardmap
+            return moe_ep_shardmap(p["ffn"], cfg, x, **ep)
+        return moe_ffn_tp(p["ffn"], cfg, x)
+    return mlp(p["ffn"], x, cfg.act)
+
+
+def block_forward(p, cfg, kind, x, positions, use_kernel=False, unroll=False):
+    """Full-sequence block.  Returns (x, cache_entry)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln1"], x)
+    if kind == "attn":
+        out, (k, v) = attn_forward(p["core"], cfg, h, positions,
+                                   use_kernel=use_kernel, unroll=unroll)
+        cache = {"k": k, "v": v}
+    elif kind == "mlstm":
+        out, st = mlstm_forward(p["core"], cfg, h)
+        cache = {"C": st[0], "n": st[1]}
+    elif kind == "slstm":
+        out, st = slstm_forward(p["core"], cfg, h)
+        cache = {"h": st[0], "c": st[1], "n": st[2]}
+    elif kind == "rglru":
+        out, st = rglru_forward(p["core"], cfg, h)
+        cache = st
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if _has_ffn(cfg, kind):
+        x = x + _ffn_apply(p, cfg, norm(p["ln2"], x))
+    from .act_sharding import constrain_residual
+    return constrain_residual(x), cache
+
+
+def block_decode(p, cfg, kind, x, cache, pos):
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln1"], x)
+    if kind == "attn":
+        out, ck, cv = attn_decode_cached(p["core"], cfg, h, cache, pos)
+        new_cache = {**cache, "k": ck, "v": cv,
+                     "slot_pos": cache["slot_pos"].at[pos % cache["k"].shape[1]]
+                     .set(pos)}
+    elif kind == "mlstm":
+        out, st = mlstm_decode(p["core"], cfg, h, (cache["C"], cache["n"]))
+        new_cache = {"C": st[0], "n": st[1]}
+    elif kind == "slstm":
+        out, st = slstm_decode(p["core"], cfg, h,
+                               (cache["h"], cache["c"], cache["n"]))
+        new_cache = {"h": st[0], "c": st[1], "n": st[2]}
+    elif kind == "rglru":
+        out, st = rglru_decode(p["core"], cfg, h, cache)
+        new_cache = st
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if _has_ffn(cfg, kind):
+        x = x + _ffn_apply(p, cfg, norm(p["ln2"], x))
+    return x, new_cache
+
+
+def attn_decode_cached(p, cfg, x, cache, pos):
+    """Ring-buffer-aware decode: cache slots carry absolute positions."""
+    from .layers import apply_rope
+    from .attention import _project_qkv
+    b = x.shape[0]
+    cache_k, cache_v, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+    clen = cache_k.shape[1]
+    q, k, v = _project_qkv(p, cfg, x)
+    posn = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posn, cfg.rope_theta)
+    k = apply_rope(k, posn, cfg.rope_theta)
+    slot = pos % clen
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    kpos = slot_pos.at[slot].set(pos)            # [clen]
+    group = cfg.n_heads // cfg.n_kv_heads
+    # GQA without jnp.repeat: repeating a head_dim-sharded cache forces SPMD
+    # into an involuntary full rematerialization (all-gather of the entire
+    # cache per layer — §Perf B1).  The grouped einsum keeps the contraction
+    # sharded; the resulting scores psum is MB-scale instead of GiB-scale.
+    from .act_sharding import constrain_q5, constrain_scores
+    q5 = q.reshape(b, 1, cfg.n_kv_heads, group, cfg.head_dim)
+    q5 = constrain_q5(q5)         # reshard q (tiny), never the cache (§B3)
+    # bf16 inputs + f32 accumulation (§Perf B2): .astype(f32) on the cache
+    # would materialize a full-cache f32 copy per layer
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, cache_k,
+                   preferred_element_type=jnp.float32) * cfg.head_dim ** -0.5
+    s = constrain_scores(s)       # keep contraction dh-sharded → small psum
+    m5 = (kpos <= pos) & (kpos >= 0)
+    if cfg.window is not None:
+        m5 &= kpos > pos - cfg.window
+    s = jnp.where(m5[None, None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pr.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, -1)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ------------------------------------------------------------------- model
+def _group_count(cfg):
+    gl = len(cfg.pattern)
+    return cfg.n_layers // gl, cfg.n_layers % gl
+
+
+def init_params(cfg, key=None, dtype=jnp.bfloat16):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n_groups, n_extra = _group_count(cfg)
+    k_embed, k_groups, k_extra, k_head = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    if cfg.embed_input:
+        params["embed"] = normal_init(k_embed, (cfg.vocab, cfg.d_model),
+                                      0.02, dtype)
+    def group_init(k):
+        ks = jax.random.split(k, len(cfg.pattern))
+        return tuple(block_init(ks[i], cfg, kind, dtype)
+                     for i, kind in enumerate(cfg.pattern))
+
+    params["groups"] = jax.vmap(group_init)(
+        jax.random.split(k_groups, n_groups))
+    if n_extra:
+        ks = jax.random.split(k_extra, n_extra)
+        params["extra"] = tuple(
+            block_init(ks[i], cfg, cfg.pattern[i], dtype)
+            for i in range(n_extra))
+    norm_params, _ = make_norm(cfg.norm)
+    params["final_norm"] = norm_params(cfg.d_model, dtype)
+    if not (cfg.tie_embeddings and cfg.embed_input):
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, cfg.vocab),
+                                        0.02, dtype)
+    return params
+
+
+def embed_inputs(params, cfg, inputs):
+    if cfg.embed_input:
+        return jnp.take(params["embed"], inputs, axis=0)
+    return inputs  # stub frontend already provided [B, S, d] embeddings
+
+
+def unembed(params, cfg, x):
+    if cfg.tie_embeddings and cfg.embed_input:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def forward(params, cfg, inputs, use_kernel: bool = False,
+            return_cache: bool = False, remat: bool = False,
+            unroll: bool = False, return_hidden: bool = False):
+    """Train/prefill forward.  inputs: [B,S] tokens or [B,S,d] embeddings.
+
+    Returns logits [B,S,V] (and stacked caches when return_cache).
+    ``unroll`` fully unrolls the group scan — used by the dry-run so XLA's
+    cost_analysis sees every layer (scan bodies are otherwise counted once)."""
+    x = embed_inputs(params, cfg, inputs)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def group_fn(x, gp):
+        caches = []
+        for i, kind in enumerate(cfg.pattern):
+            x, c = block_forward(gp[i], cfg, kind, x, positions,
+                                 use_kernel=use_kernel, unroll=unroll)
+            caches.append(c)
+        return x, tuple(caches)
+
+    body = jax.checkpoint(group_fn) if remat else group_fn
+    n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+    x, caches = jax.lax.scan(body, x, params["groups"],
+                             unroll=n_groups if unroll else 1)
+    extra_caches = []
+    for i, bp in enumerate(params.get("extra", ())):
+        fn = jax.checkpoint(block_forward, static_argnums=(1, 2, 5, 6)) \
+            if remat else block_forward
+        x, c = fn(bp, cfg, cfg.pattern[i], x, positions, use_kernel, unroll)
+        extra_caches.append(c)
+    _, norm = make_norm(cfg.norm)
+    x = norm(params["final_norm"], x)
+    if return_hidden:
+        return x
+    logits = unembed(params, cfg, x)
+    if return_cache:
+        return logits, (caches, tuple(extra_caches))
+    return logits
+
+
+def loss_fn(params, cfg, batch, use_kernel: bool = False, remat: bool = False,
+            unroll: bool = False, loss_chunk: int | None = None):
+    """Next-token cross-entropy.  batch: {"inputs": tokens|embeds,
+    "targets": [B,S] int32, "mask": [B,S] (optional)}.
+
+    ``loss_chunk``: stream the unembed + logsumexp over sequence chunks —
+    the [B,S,V] logits tensor never materializes (peak-memory lever)."""
+    tgt = batch["targets"]
+    mask = batch.get("mask")
+    if loss_chunk is None:
+        logits = forward(params, cfg, batch["inputs"], use_kernel=use_kernel,
+                         remat=remat, unroll=unroll)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                   tgt[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if mask is not None:
+            return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return nll.mean()
+    x = forward(params, cfg, batch["inputs"], use_kernel=use_kernel,
+                remat=remat, unroll=unroll, return_hidden=True)
+    B, S, d = x.shape
+    c = min(loss_chunk, S)
+    nc = S // c
+    assert S % c == 0, "loss_chunk must divide seq_len"
+    xs = (x.reshape(B, nc, c, d).swapaxes(0, 1),
+          tgt.reshape(B, nc, c).swapaxes(0, 1),
+          (mask.reshape(B, nc, c).swapaxes(0, 1) if mask is not None
+           else jnp.ones((nc, B, c), jnp.float32)))
+
+    def step(carry, chunk):
+        xc, tc, mc = chunk
+        logits = unembed(params, cfg, xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        s_nll, s_cnt = carry
+        return (s_nll + ((lse - gold) * mc).sum(), s_cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(step), (0.0, 0.0), xs,
+                                 unroll=nc if unroll else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg, batch: int, ctx_len: int, dtype=jnp.bfloat16):
+    """Stacked decode caches: (groups_cache, extra_cache)."""
+    n_groups, n_extra = _group_count(cfg)
+    clen = min(ctx_len, cfg.window) if cfg.window else ctx_len
+
+    def one(kind):
+        d, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+        if kind == "attn":
+            return {
+                "k": jnp.zeros((batch, clen, cfg.n_kv_heads, dh), dtype),
+                "v": jnp.zeros((batch, clen, cfg.n_kv_heads, dh), dtype),
+                "slot_pos": jnp.full((clen,), -1, jnp.int32),
+            }
+        if kind == "mlstm":
+            hd = d // H
+            return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+                    "n": jnp.zeros((batch, H, hd), jnp.float32)}
+        if kind == "slstm":
+            hd = d // H
+            return {"h": jnp.zeros((batch, d), jnp.float32),
+                    "c": jnp.zeros((batch, H, hd), jnp.float32),
+                    "n": jnp.zeros((batch, H, hd), jnp.float32)}
+        if kind == "rglru":
+            return {"conv": jnp.zeros((batch, 3, d), jnp.float32),
+                    "h": jnp.zeros((batch, d), jnp.float32)}
+        raise ValueError(kind)
+
+    group_cache = tuple(
+        jax.tree.map(lambda t: jnp.broadcast_to(t, (n_groups,) + t.shape),
+                     one(kind)) for kind in cfg.pattern)
+    extra_cache = tuple(one(cfg.pattern[i]) for i in range(n_extra))
+    return group_cache, extra_cache
+
+
+def decode_step(params, cfg, inputs, cache, pos, unroll: bool = False):
+    """One-token decode.  inputs: [B,1] tokens or [B,1,d] embeddings;
+    cache from :func:`init_cache`; pos: [] int32.  Returns (logits [B,V],
+    new_cache)."""
+    group_cache, extra_cache = cache
+    x = embed_inputs(params, cfg, inputs)
+
+    def group_fn(x, scanned):
+        gp, gc = scanned
+        new = []
+        for i, kind in enumerate(cfg.pattern):
+            x, c = block_decode(gp[i], cfg, kind, x, gc[i], pos)
+            new.append(c)
+        return x, tuple(new)
+
+    n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+    x, new_group_cache = jax.lax.scan(group_fn, x,
+                                      (params["groups"], group_cache),
+                                      unroll=n_groups if unroll else 1)
+    new_extra = []
+    for i, bp in enumerate(params.get("extra", ())):
+        x, c = block_decode(bp, cfg, cfg.pattern[i], x, extra_cache[i], pos)
+        new_extra.append(c)
+    _, norm = make_norm(cfg.norm)
+    x = norm(params["final_norm"], x)
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, (new_group_cache, tuple(new_extra))

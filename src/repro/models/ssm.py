@@ -1,0 +1,251 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (RecurrentGemma).
+
+Hardware adaptation notes (DESIGN.md §2):
+* mLSTM is implemented as *chunkwise* gated linear attention: quadratic
+  within a chunk (MXU-friendly), recurrent matrix-state carry across chunks
+  (lax.scan).  Sigmoid input/forget gates replace the paper's exponential
+  gating + max-stabilizer — same model class, numerically safe in bf16.
+* sLSTM keeps its inherently sequential recurrence (lax.scan over time) with
+  per-head recurrent mixing.
+* RG-LRU is a diagonal linear recurrence → jax.lax.associative_scan
+  (parallel prefix), with the temporal conv1d(4) in front, as in the paper.
+
+All blocks expose (forward over a sequence, single-step decode with carried
+state) pairs with identical parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_params(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, (d, d), dtype),
+        "wk": dense_init(ks[1], d, (d, d), dtype),
+        "wv": dense_init(ks[2], d, (d, d), dtype),
+        "wi": dense_init(ks[3], d, (d, h), dtype),   # input gate (per head)
+        "wf": dense_init(ks[4], d, (d, h), dtype),   # forget gate (per head)
+        "wo": dense_init(ks[5], d, (d, d), dtype),
+        "f_bias": jnp.full((h,), 3.0, dtype),        # start remembering
+    }
+
+
+def _mlstm_chunk(carry, inp, dh):
+    """One chunk. carry: (C [B,H,Dk,Dv], n [B,H,Dk]); inp per-chunk tensors."""
+    C, n = carry
+    q, k, v, logf, i = inp          # q,k,v: [B,L,H,Dh]; logf,i: [B,L,H]
+    B, L, H, _ = q.shape
+    F = jnp.cumsum(logf, axis=1)                        # [B,L,H]
+    Ftot = F[:, -1]                                     # [B,H]
+    # decay matrix D[j,i] = exp(F_j - F_i) * gate_i for i<=j
+    Dm = F[:, :, None, :] - F[:, None, :, :]            # [B,L(j),L(i),H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+    w = jnp.exp(Dm) * i[:, None, :, :]                  # [B,j,i,H]
+    scale = dh ** -0.5
+    s = jnp.einsum("bjhd,bihd->bjih", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    intra = jnp.einsum("bjih,bjih,bihd->bjhd", s, w, v.astype(jnp.float32))
+    # contribution of carried state
+    inter = jnp.einsum("bjhk,bhkd->bjhd", q.astype(jnp.float32) *
+                       jnp.exp(F)[..., None] * scale, C)
+    norm = jnp.einsum("bjhk,bhk->bjh", q.astype(jnp.float32) *
+                      jnp.exp(F)[..., None] * scale, n)
+    norm = norm + jnp.einsum("bjih,bjih->bjh", s, w)
+    h_out = (intra + inter) / jnp.maximum(jnp.abs(norm), 1.0)[..., None]
+    # state update
+    decay_i = jnp.exp(Ftot[:, None, :] - F) * i         # [B,L,H]
+    C = jnp.exp(Ftot)[..., None, None] * C + jnp.einsum(
+        "bihd,bih,bihe->bhde", k.astype(jnp.float32), decay_i,
+        v.astype(jnp.float32))
+    n = jnp.exp(Ftot)[..., None] * n + jnp.einsum(
+        "bihd,bih->bhd", k.astype(jnp.float32), decay_i)
+    return (C, n), h_out
+
+
+def mlstm_forward(p, cfg, x, chunk: int = 256, state=None):
+    """x: [B,S,d] → ([B,S,d], final_state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    q = (x @ p["wq"]).reshape(B, Sp, H, dh)
+    k = (x @ p["wk"]).reshape(B, Sp, H, dh)
+    v = (x @ p["wv"]).reshape(B, Sp, H, dh)
+    i = jax.nn.sigmoid((x @ p["wi"]).astype(jnp.float32))
+    logf = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32)
+                              + p["f_bias"].astype(jnp.float32))
+    nc = Sp // L
+
+    def chunked(t):  # [B,Sp,...] → [nc,B,L,...]
+        return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    if state is None:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32))
+    (Cf, nf), hs = jax.lax.scan(
+        lambda c, inp: _mlstm_chunk(c, inp, dh), state,
+        tuple(map(chunked, (q, k, v, logf, i))))
+    h = hs.swapaxes(0, 1).reshape(B, Sp, d)[:, :S]
+    return (h.astype(x.dtype) @ p["wo"]), (Cf, nf)
+
+
+def mlstm_decode(p, cfg, x, state):
+    """x: [B,1,d]; state (C,n) → ([B,1,d], new_state)."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    C, n = state
+    q = (x @ p["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    i = jax.nn.sigmoid((x @ p["wi"]).astype(jnp.float32)).reshape(B, H)
+    f = jax.nn.sigmoid((x @ p["wf"]).astype(jnp.float32)
+                       + p["f_bias"].astype(jnp.float32)).reshape(B, H)
+    C = f[..., None, None] * C + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = f[..., None] * n + i[..., None] * k
+    scale = dh ** -0.5
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q * scale, n)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, d).astype(x.dtype)
+    return h @ p["wo"], (C, n)
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_params(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], d, (d, 4 * d), dtype),        # i,f,z,o from x
+        "rh": dense_init(ks[1], dh, (h, dh, 4 * dh), dtype),  # recurrent, per head
+        "bias": jnp.zeros((4 * d,), dtype),
+        "out": dense_init(ks[2], d, (d, d), dtype),
+    }
+
+
+def _slstm_step(p, cfg, xt, state):
+    """xt: [B,d] pre-projected gates input; state (h, c, n)."""
+    B = xt.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    h_prev, c_prev, n_prev = state
+    hx = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hx, p["rh"].astype(jnp.float32))
+    gates = xt.astype(jnp.float32).reshape(B, H, 4 * dh) + rec
+    i, f, z, o = jnp.split(gates, 4, axis=-1)
+    i = jnp.exp(jnp.minimum(i, 0.0))          # bounded exponential gate
+    f = jax.nn.sigmoid(f + 3.0)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    c = f * c_prev + i * z
+    n = f * n_prev + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return h.reshape(B, -1), c, n
+
+
+def slstm_forward(p, cfg, x, state=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xg = x @ p["wx"] + p["bias"]
+    if state is None:
+        state = (jnp.zeros((B, d), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32))
+
+    def step(carry, xt):
+        h, c, n = _slstm_step(p, cfg, xt, carry)
+        return (h, c, n), h
+
+    state, hs = jax.lax.scan(step, state, xg.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    return h @ p["out"], state
+
+
+def slstm_decode(p, cfg, x, state):
+    xg = (x @ p["wx"] + p["bias"])[:, 0]
+    h, c, n = _slstm_step(p, cfg, xg, state)
+    return (h[:, None].astype(x.dtype) @ p["out"]), (h, c, n)
+
+
+# ------------------------------------------------------------------ RG-LRU
+def rglru_params(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], d, (d, d), dtype),
+        "in_gate": dense_init(ks[1], d, (d, d), dtype),
+        "conv": (jax.random.normal(ks[2], (4, d), jnp.float32) * 0.1).astype(dtype),
+        "wa": dense_init(ks[3], d, (d, d), dtype),   # recurrence gate
+        "wi": dense_init(ks[4], d, (d, d), dtype),   # input gate
+        "lam": jnp.full((d,), 2.0, jnp.float32),     # a = sigmoid(lam)^(c·r)
+        "out": dense_init(ks[5], d, (d, d), dtype),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rg_gates(p, u):
+    r = jax.nn.sigmoid((u @ p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["wi"]).astype(jnp.float32))
+    log_a = _RG_C * r * jax.nn.log_sigmoid(p["lam"])      # [.., d]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def _causal_conv(p, u, state=None):
+    """Depthwise temporal conv, width 4.  state: last 3 inputs [B,3,d]."""
+    w = p["conv"].astype(jnp.float32)    # [4, d]
+    if state is None:
+        pads = jnp.zeros((u.shape[0], 3, u.shape[2]), u.dtype)
+    else:
+        pads = state.astype(u.dtype)
+    ext = jnp.concatenate([pads, u], axis=1).astype(jnp.float32)
+    out = sum(ext[:, 3 - t: ext.shape[1] - t] * w[3 - t] for t in range(4))
+    new_state = ext[:, -3:]
+    return out[:, : u.shape[1]].astype(u.dtype), new_state
+
+
+def rglru_forward(p, cfg, x, state=None):
+    """Recurrent block: (conv → RG-LRU) ⊙ gelu-gate → out.  x: [B,S,d]."""
+    B, S, d = x.shape
+    u = x @ p["in_x"]
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32))
+    conv_state = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    u, conv_state = _causal_conv(p, u, conv_state)
+    a, b = _rg_gates(p, u)                                # [B,S,d] each
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    # h_t = a_t h_{t-1} + b_t  — parallel prefix over time
+    def op(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    new_state = {"conv": conv_state, "h": h[:, -1]}
+    y = (h * gate).astype(x.dtype) @ p["out"]
+    return y, new_state
+
+
+def rglru_decode(p, cfg, x, state):
+    u = x @ p["in_x"]
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32))
+    u, conv_state = _causal_conv(p, u, state["conv"])
+    a, b = _rg_gates(p, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h[:, None] * gate).astype(x.dtype) @ p["out"]
+    return y, {"conv": conv_state, "h": h}

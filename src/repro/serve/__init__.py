@@ -1,0 +1,3 @@
+from .engine import Engine, Request, prefill_to_decode_cache
+
+__all__ = ["Engine", "Request", "prefill_to_decode_cache"]

@@ -1,0 +1,134 @@
+"""Batched serving engine: prefill → decode with jitted steps, FIFO window
+batching, greedy/temperature sampling, and prefill-cache conversion into the
+ring-buffer decode layout."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import decode_step, forward, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] tokens (or [S, d] embeddings)
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+def prefill_to_decode_cache(cfg, caches, ctx_len: int, prompt_len: int,
+                            dtype=jnp.float32):
+    """Convert forward(return_cache=True) output into decode cache layout
+    (padded ring buffers + slot positions; recurrent states pass through)."""
+    group_caches, extra_caches = caches
+    clen = min(ctx_len, cfg.window) if cfg.window else ctx_len
+
+    def conv_attn(c, stacked):
+        k, v = c["k"], c["v"]                    # [..., B, S, H, dh]
+        S = k.shape[-3]
+        take = min(S, clen)
+        ksl = k[..., S - take:, :, :]
+        vsl = v[..., S - take:, :, :]
+        positions = np.arange(S - take, S)
+        slots = positions % clen
+        pad_shape = list(ksl.shape)
+        pad_shape[-3] = clen
+        kbuf = jnp.zeros(pad_shape, dtype)
+        vbuf = jnp.zeros(pad_shape, dtype)
+        kbuf = kbuf.at[..., slots, :, :].set(ksl.astype(dtype))
+        vbuf = vbuf.at[..., slots, :, :].set(vsl.astype(dtype))
+        slot_pos = np.full((clen,), -1, np.int32)
+        slot_pos[slots] = positions
+        sp = jnp.asarray(slot_pos)
+        if stacked:
+            n_groups = k.shape[0]
+            sp = jnp.broadcast_to(sp, (n_groups, clen))
+        return {"k": kbuf, "v": vbuf, "slot_pos": sp}
+
+    out_groups = []
+    for i, kind in enumerate(cfg.pattern):
+        c = group_caches[i]
+        out_groups.append(conv_attn(c, True) if kind == "attn" else c)
+    out_extra = []
+    for i, c in enumerate(extra_caches):
+        kind = cfg.pattern[i]
+        out_extra.append(conv_attn(c, False) if kind == "attn" else c)
+    return tuple(out_groups), tuple(out_extra)
+
+
+class Engine:
+    """Simple production-shaped engine: collects requests into a batch
+    window, left-pads to a common length bucket, prefills once, then decodes
+    in lockstep (continuous batching is a straightforward extension — the
+    cache layout already supports per-slot positions)."""
+
+    def __init__(self, cfg, params, max_batch: int = 8, ctx_len: int = 256,
+                 dtype=jnp.float32):
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.ctx_len, self.dtype = max_batch, ctx_len, dtype
+        self._prefill = jax.jit(
+            lambda p, t: forward(p, cfg, t, return_cache=True))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        self.queue: list[Request] = []
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
+                      "batches": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _sample(self, logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def run(self, key=None) -> dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        results: dict[int, np.ndarray] = {}
+        while self.queue:
+            batch = self.queue[: self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            results.update(self._run_batch(batch, key))
+            self.stats["batches"] += 1
+            key = jax.random.fold_in(key, len(results))
+        return results
+
+    def _run_batch(self, reqs: list[Request], key) -> dict[int, np.ndarray]:
+        cfg = self.cfg
+        B = len(reqs)
+        S = max(r.prompt.shape[0] for r in reqs)
+        if cfg.embed_input:
+            prompts = np.zeros((B, S), np.int32)
+        else:
+            prompts = np.zeros((B, S, cfg.d_model), np.float32)
+        for i, r in enumerate(reqs):          # right-align = left-pad
+            prompts[i, S - r.prompt.shape[0]:] = r.prompt
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+        cache = prefill_to_decode_cache(cfg, caches, self.ctx_len, S,
+                                        self.dtype)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        max_new = max(r.max_new_tokens for r in reqs)
+        toks = self._sample(logits[:, -1], reqs[0].temperature, key)
+        outs = [toks]
+        t0 = time.perf_counter()
+        for t in range(max_new - 1):
+            step_in = toks[:, None]
+            if not cfg.embed_input:   # embedding-input archs: feed embeddings
+                step_in = jnp.zeros((B, 1, cfg.d_model), self.dtype)
+            lg, cache = self._decode(self.params, step_in, cache,
+                                     jnp.int32(S + t))
+            key = jax.random.fold_in(key, t)
+            toks = self._sample(lg, reqs[0].temperature, key)
+            outs.append(toks)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["tokens"] += int(max_new) * B
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)
+        return {r.rid: gen[i, : r.max_new_tokens] for i, r in enumerate(reqs)}

@@ -1,0 +1,8 @@
+from .data import DataConfig, TokenPipeline
+from .loop import LoopConfig, train
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .train_step import TrainOptions, build_train_step, make_step_fn
+
+__all__ = ["DataConfig", "TokenPipeline", "LoopConfig", "train",
+           "AdamWConfig", "adamw_update", "init_opt_state", "TrainOptions",
+           "build_train_step", "make_step_fn"]

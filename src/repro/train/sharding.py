@@ -1,0 +1,195 @@
+"""Parameter/batch sharding rules for the (pod, data, model) meshes.
+
+Canonical tensor-parallel layout (megatron-style) with MoE expert-parallel
+placement by divisibility (DESIGN.md §7):
+
+    embed (V, d)        → (model, ∅)          lm_head (d, V) → (∅, model)
+    wq/wk/wv (d, H·dh)  → (∅, model)          wo (H·dh, d)   → (model, ∅)
+    mlp gate/up (d, f)  → (∅, model)          down (f, d)    → (model, ∅)
+    moe E % |model|==0  → experts over model  else d_ff over model
+    norms / biases / small recurrent tensors  → replicated
+
+Stacked scan groups carry a leading n_groups dim → specs get a leading ∅.
+Anything not matched falls back to "shard the largest divisible dim, else
+replicate" (safe for the recurrent-block tensors).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _rule(key_parts, shape, cfg, model_axis, model_size, ep_axis=None,
+          ep_size=1):
+    name = key_parts[-1]
+    nd = len(shape)
+    # params under the scan "groups" carry a stacked leading n_groups dim
+    lead = 1 if key_parts and key_parts[0] == "groups" else 0
+    pre = (None,) * lead
+
+    def ok(dim_size):
+        return dim_size % model_size == 0
+
+    if name == "embed":
+        return P(model_axis, None) if ok(shape[0]) else P()
+    if name == "lm_head":
+        return P(None, model_axis) if ok(shape[1]) else P()
+    if name in ("wq", "wk", "wv", "wo") and "ffn" not in key_parts:
+        # attention/mlstm head sharding: only when the head count divides the
+        # axis — otherwise the (B,S,H,dh) reshape cuts across heads and GSPMD
+        # inserts giant reshard all-reduces.  Replicated kv projections under
+        # GQA (H_kv < tp) is the standard production layout.
+        heads = cfg.n_kv_heads if name in ("wk", "wv") else cfg.n_heads
+        if heads % model_size != 0:
+            return P()
+        if name == "wo":
+            return P(*pre, model_axis, None) if ok(shape[-2]) else P()
+        return P(*pre, None, model_axis) if ok(shape[-1]) else P()
+    if name == "wx":      # sLSTM gates reshape per-head → keep replicated
+        return P()
+    if name in ("in_x", "in_gate", "up", "gate") and "ffn" not in key_parts:
+        return P(*pre, None, model_axis) if ok(shape[-1]) else P()
+    if name in ("out", "down") and "ffn" not in key_parts:
+        return P(*pre, model_axis, None) if ok(shape[-2]) else P()
+    if "ffn" in key_parts:
+        if name == "router":
+            return P()
+        if cfg.is_moe:
+            e = cfg.n_experts
+            if ep_axis is not None and e % ep_size == 0:
+                # expert-parallel over the intra-pod ep_axis (replicated
+                # across pods) + d_ff TP over model — the shard_map EP path
+                if name in ("gate", "up"):
+                    return P(*pre, ep_axis, None, model_axis)
+                if name == "down":
+                    return P(*pre, ep_axis, model_axis, None)
+            if name in ("gate", "up"):
+                if e % model_size == 0:
+                    return P(*pre, model_axis, None, None)
+                # FSDP the d_model dim over "data" (ZeRO-3: gathered at use)
+                # — without it, non-EP expert weights don't fit HBM
+                return P(*pre, None, "data", model_axis) if ok(shape[-1]) \
+                    else P()
+            if name == "down":
+                if e % model_size == 0:
+                    return P(*pre, model_axis, None, None)
+                return P(*pre, None, model_axis, "data") if ok(shape[-2]) \
+                    else P()
+        else:
+            if name in ("gate", "up"):
+                return P(*pre, None, model_axis) if ok(shape[-1]) else P()
+            if name == "down":
+                return P(*pre, model_axis, None) if ok(shape[-2]) else P()
+    # fallback: shard the largest divisible *matrix* dim.  1-D-per-layer
+    # params (norm scales, biases — possibly stacked to 2-D by the group
+    # scan) stay replicated: sharding them fragments every activation.
+    if nd - lead >= 2:
+        order = np.argsort(shape)[::-1]
+        for dim in order:
+            if shape[dim] % model_size == 0 and shape[dim] >= 2 * model_size \
+                    and dim >= lead:
+                spec = [None] * nd
+                spec[dim] = model_axis
+                return P(*spec)
+    return P()
+
+
+def param_specs(cfg, params_shape, model_axis="model", model_size=16,
+                ep_axis=None, ep_size=1):
+    """Pytree of PartitionSpec matching ``params_shape`` (shapes/arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        parts = []
+        for e in path:
+            parts.append(str(getattr(e, "key", getattr(e, "idx", e))))
+        specs.append(_rule(parts, leaf.shape, cfg, model_axis, model_size,
+                           ep_axis, ep_size))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg, dp_axes, embeds: bool):
+    inp = P(dp_axes, None, None) if embeds else P(dp_axes, None)
+    return {"inputs": inp, "targets": P(dp_axes, None)}
+
+
+def zero1_opt_specs(pspecs, opt_abs, dp_axes, mesh=None):
+    """ZeRO-1: shard AdamW moments over the data-parallel axes too, on the
+    first dim that is free (unsharded) and divisible — params stay as-is,
+    moments stop being replicated across dp."""
+    flat_p, treedef = jax.tree_util.tree_flatten(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_m = treedef.flatten_up_to(jax.tree.map(
+        lambda l: l, opt_abs["m"]))
+    sizes = dict(mesh.shape) if mesh is not None else {"pod": 2, "data": 16}
+
+    def shard_m(spec, leaf):
+        if not dp_axes:
+            return spec
+        # only axes not already used by the param spec (e.g. EP-MoE params
+        # are data-sharded already)
+        used_axes = set()
+        for s in spec:
+            for a in (s if isinstance(s, tuple) else (s,)):
+                if a is not None:
+                    used_axes.add(a)
+        free = tuple(a for a in dp_axes if a not in used_axes)
+        if not free:
+            return spec
+        dp_sz = int(np.prod([sizes.get(a, 16) for a in free]))
+        dims = leaf.shape
+        used = set(i for i, s in enumerate(spec) if s is not None) \
+            if len(spec) else set()
+        for i, d in enumerate(dims):
+            if i in used:
+                continue
+            if d % dp_sz == 0 and d >= dp_sz:
+                new = list(spec) + [None] * (len(dims) - len(spec))
+                new[i] = free if len(free) > 1 else free[0]
+                return P(*new)
+        return spec
+
+    m_specs = treedef.unflatten([shard_m(s, l)
+                                 for s, l in zip(flat_p, flat_m)])
+    return {"m": m_specs, "v": m_specs, "count": P()}
+
+
+def cache_specs(cfg, dp_axes, model_axis="model"):
+    """Decode-cache sharding: batch over dp; long KV seq over model."""
+    def per_kind(kind):
+        if kind == "attn":
+            # [n_groups, B, S, Hkv, dh]: batch over dp, head_dim over model.
+            # S must stay unsharded: the ring-buffer write is a dynamic
+            # slice at a runtime position — sharding S forces SPMD full
+            # rematerialization.  dh divides the model axis for every
+            # assigned arch; the score contraction becomes a psum.
+            return {"k": P(None, dp_axes, None, None, model_axis),
+                    "v": P(None, dp_axes, None, None, model_axis),
+                    "slot_pos": P(None, None)}
+        if kind == "mlstm":
+            return {"C": P(None, dp_axes, None, None, None),
+                    "n": P(None, dp_axes, None, None)}
+        if kind == "slstm":
+            return {"h": P(None, dp_axes, None),
+                    "c": P(None, dp_axes, None, None),
+                    "n": P(None, dp_axes, None, None)}
+        if kind == "rglru":
+            return {"conv": P(None, dp_axes, None, None),
+                    "h": P(None, dp_axes, None)}
+        raise ValueError(kind)
+
+    group = tuple(per_kind(k) for k in cfg.pattern)
+    n_extra = cfg.n_layers % len(cfg.pattern)
+
+    def drop_lead(spec_tree):
+        return jax.tree.map(lambda s: P(*s[1:]), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    extra = tuple(drop_lead(per_kind(cfg.pattern[i])) for i in range(n_extra))
+    return group, extra

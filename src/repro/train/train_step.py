@@ -1,0 +1,99 @@
+"""Train-step builder: pjit'd loss+grad+AdamW with microbatch accumulation,
+remat, and mesh shardings from :mod:`repro.train.sharding`."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.model import loss_fn
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .sharding import batch_specs, named, param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    remat: bool = True
+    microbatches: int = 1
+    use_kernel: bool = False
+    dp_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    unroll: bool = False        # dry-run: unroll scans for exact cost_analysis
+    zero2: bool = False         # shard grad accumulator over dp axes
+    loss_chunk: int | None = None  # stream unembed+xent over seq chunks
+
+
+def make_step_fn(cfg, acfg: AdamWConfig, opts: TrainOptions,
+                 grad_spec_tree=None):
+    """The pure step function (jit/pjit applied by callers).
+    ``grad_spec_tree``: PartitionSpec tree for ZeRO-2 grad-accumulator
+    sharding constraints (opts.zero2)."""
+
+    def loss_of(params, mb):
+        return loss_fn(params, cfg, mb, use_kernel=opts.use_kernel,
+                       remat=opts.remat, unroll=opts.unroll,
+                       loss_chunk=opts.loss_chunk)
+
+    def constrain(tree):
+        if not (opts.zero2 and grad_spec_tree is not None):
+            return tree
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            tree, grad_spec_tree)
+
+    def step(params, opt_state, batch):
+        if opts.microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            grads = constrain(grads)
+        else:
+            mb = opts.microbatches
+
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            batches = jax.tree.map(split, batch)
+            zero = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                gsum = constrain(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g))
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, 0.0), batches,
+                                           unroll=mb if opts.unroll else 1)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+        params, opt_state, om = adamw_update(acfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
+def build_train_step(cfg, acfg: AdamWConfig, opts: TrainOptions,
+                     mesh=None, params_shape=None, donate: bool = True):
+    """Returns (jitted step, (param_sh, opt_sh, batch_sh)); mesh=None → plain
+    single-device jit (CPU smoke/e2e paths)."""
+    step = make_step_fn(cfg, acfg, opts)
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ()), None
+    model_size = mesh.shape[opts.model_axis]
+    pspec = param_specs(cfg, params_shape, opts.model_axis, model_size)
+    p_sh = named(mesh, pspec)
+    o_sh = {"m": p_sh, "v": p_sh,
+            "count": NamedSharding(mesh, P())}
+    b_spec = batch_specs(cfg, opts.dp_axes, embeds=not cfg.embed_input)
+    b_sh = {k: NamedSharding(mesh, v) for k, v in b_spec.items()}
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P()),
+                  "lr": NamedSharding(mesh, P())}
+    fn = jax.jit(step,
+                 in_shardings=(p_sh, o_sh, b_sh),
+                 out_shardings=(p_sh, o_sh, metrics_sh),
+                 donate_argnums=(0, 1) if donate else ())
+    return fn, (p_sh, o_sh, b_sh)

@@ -1,0 +1,179 @@
+"""AMG substrate tests: CSR kernels vs dense oracles, setup invariants,
+convergence, and the distributed comm analysis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.amg import setup, solve, pcg, vcycle, SolveOptions
+from repro.amg.csr import CSR
+from repro.amg.dist import (analyze_hierarchy, matrix_comm_graph,
+                            phase_costs, row_partition, vector_comm_graph)
+from repro.amg.problems import (dpg_laplace_3d, grad_div_3d, laplace_3d,
+                                laplace_3d_7pt, rotated_anisotropic_2d)
+from repro.amg.splitting import mis2_aggregation, pmis
+from repro.amg.strength import classical_strength, symmetric_strength
+from repro.core import BLUE_WATERS, Topology
+
+
+# ---------------------------------------------------------------------- CSR
+@st.composite
+def dense_pair(draw):
+    n = draw(st.integers(1, 12))
+    m = draw(st.integers(1, 12))
+    k = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((n, m)) * (rng.random((n, m)) < 0.4)
+    B = rng.standard_normal((m, k)) * (rng.random((m, k)) < 0.4)
+    return A, B
+
+
+@settings(max_examples=80, deadline=None)
+@given(dense_pair())
+def test_csr_matches_dense_oracle(pair):
+    Ad, Bd = pair
+    A, B = CSR.from_dense(Ad), CSR.from_dense(Bd)
+    np.testing.assert_allclose(A.to_dense(), Ad)
+    np.testing.assert_allclose(A.spgemm(B).to_dense(), Ad @ Bd, atol=1e-12)
+    np.testing.assert_allclose(A.T.to_dense(), Ad.T)
+    x = np.random.default_rng(0).standard_normal(Ad.shape[1])
+    np.testing.assert_allclose(A.matvec(x), Ad @ x, atol=1e-12)
+
+
+def test_csr_add_scale_prune():
+    rng = np.random.default_rng(5)
+    Ad = rng.standard_normal((9, 9)) * (rng.random((9, 9)) < 0.5)
+    A = CSR.from_dense(Ad)
+    np.testing.assert_allclose(A.add(A, alpha=2.0, beta=-1.0).to_dense(), Ad)
+    d = rng.standard_normal(9)
+    np.testing.assert_allclose(A.scale_rows(d).to_dense(), Ad * d[:, None])
+    np.testing.assert_allclose(A.scale_cols(d).to_dense(), Ad * d[None, :])
+    small = A.prune(0.5)
+    dd = small.to_dense()
+    off = ~np.eye(9, dtype=bool)
+    assert (np.abs(dd[off][dd[off] != 0]) > 0.5).all()
+    np.testing.assert_allclose(A.diagonal(), np.diag(Ad))
+
+
+def test_csr_from_coo_coalesces_duplicates():
+    A = CSR.from_coo([0, 0, 1], [1, 1, 0], [2.0, 3.0, 1.0], (2, 2))
+    assert A.nnz == 2
+    assert A.to_dense()[0, 1] == 5.0
+
+
+# ---------------------------------------------------------------- splitting
+def test_pmis_is_valid_cf_splitting():
+    A = laplace_3d_7pt(10)
+    S = classical_strength(A, 0.25)
+    status = pmis(S)
+    assert set(np.unique(status)) <= {-1, 1}
+    # C points form an independent set in S ∪ Sᵀ
+    G = S.add(S.T)
+    r = G.rows_expanded()
+    cc = (status[r] == 1) & (status[G.indices] == 1) & (r != G.indices)
+    assert not cc.any()
+    # every F point has at least one strong C neighbour (7-pt Laplacian)
+    f_has_c = np.zeros(A.nrows, dtype=bool)
+    hit = status[G.indices] == 1
+    np.logical_or.at(f_has_c, r[hit], True)
+    assert f_has_c[status == -1].all()
+
+
+def test_mis2_aggregation_covers_all_nodes():
+    A = laplace_3d(10)
+    S = symmetric_strength(A, 0.25)
+    agg = mis2_aggregation(S)
+    assert agg.min() == 0
+    n_agg = int(agg.max()) + 1
+    assert 1 < n_agg < A.nrows / 3          # real coarsening
+    assert np.bincount(agg).min() >= 1
+
+
+# --------------------------------------------------------------- convergence
+@pytest.mark.parametrize("solver,cf_bound", [("rs", 0.65), ("sa", 0.75)])
+def test_amg_converges_laplace3d(solver, cf_bound):
+    A = laplace_3d(12)
+    h = setup(A, solver=solver)
+    assert h.n_levels >= 2
+    b = A.matvec(np.ones(A.nrows))
+    res = solve(h, b, tol=1e-8, maxiter=60)
+    assert res.converged
+    assert res.avg_conv_factor < cf_bound
+    np.testing.assert_allclose(res.x, np.ones(A.nrows), atol=1e-5)
+
+
+def test_amg_galerkin_matches_dense():
+    A = laplace_3d_7pt(6)
+    h = setup(A, solver="rs", max_coarse=20)
+    l0 = h.levels[0]
+    Ac = h.levels[1].A
+    dense = l0.P.to_dense().T @ A.to_dense() @ l0.P.to_dense()
+    np.testing.assert_allclose(Ac.to_dense(), dense, atol=1e-10)
+
+
+def test_amg_pcg_hard_problem():
+    A = rotated_anisotropic_2d(32)
+    h = setup(A, solver="sa")
+    b = A.matvec(np.random.default_rng(0).standard_normal(A.nrows))
+    res = pcg(h, b, tol=1e-8, maxiter=120)
+    assert res.converged
+
+
+@pytest.mark.parametrize("prob", [grad_div_3d, dpg_laplace_3d])
+def test_amg_other_systems(prob):
+    A = prob(7)
+    h = setup(A, solver="rs")
+    b = A.matvec(np.ones(A.nrows))
+    res = solve(h, b, tol=1e-8, maxiter=80)
+    assert res.converged
+
+
+def test_vcycle_reduces_residual_every_level_count():
+    A = laplace_3d(10)
+    h = setup(A, solver="rs")
+    b = np.random.default_rng(2).standard_normal(A.nrows)
+    x = vcycle(h, b, None, SolveOptions(smoother="chebyshev"))
+    r1 = np.linalg.norm(b - A.matvec(x))
+    assert r1 < np.linalg.norm(b)
+
+
+# ------------------------------------------------------------- dist analysis
+def test_vector_comm_graph_is_offproc_pattern():
+    A = laplace_3d_7pt(8)
+    topo = Topology(n_nodes=4, ppn=4)
+    part = row_partition(A, topo)
+    g = vector_comm_graph(A, part)
+    # brute force: needed = union of columns of my rows outside my range
+    Ad = A.to_dense()
+    for p in range(topo.n_procs):
+        lo, hi = part.local_range(p)
+        cols = np.unique(np.nonzero(Ad[lo:hi])[1])
+        expected = cols[(cols < lo) | (cols >= hi)]
+        np.testing.assert_array_equal(g.need[p], expected)
+
+
+def test_matrix_comm_weights_are_row_bytes():
+    A = laplace_3d_7pt(8)
+    topo = Topology(n_nodes=2, ppn=4)
+    part = row_partition(A, topo)
+    g = matrix_comm_graph(A, A, part)
+    lens = np.diff(A.indptr)
+    assert g.weights[5] == lens[5] * 12.0 + 16.0
+
+
+def test_analyze_hierarchy_selects_per_level():
+    A = laplace_3d(12)
+    h = setup(A, solver="rs")
+    topo = Topology(n_nodes=8, ppn=8)
+    ops = analyze_hierarchy(h, topo, BLUE_WATERS)
+    assert any(o.op == "spmv_A" for o in ops)
+    assert any(o.op == "spgemm_PtAP" for o in ops)
+    for o in ops:
+        assert o.strategy in ("standard", "nap2", "nap3")
+        assert o.selection.times[o.strategy] == min(o.selection.times.values())
+    costs = phase_costs(ops, h.n_levels)
+    assert set(costs) == {"solve", "setup"}
+    # selected mix is never worse than any single pure strategy
+    for phase in costs.values():
+        for row in phase.values():
+            assert row["selected"] <= min(row["standard"], row["nap2"], row["nap3"]) + 1e-12

@@ -1,0 +1,178 @@
+"""Property + unit tests for the paper's communication schedules (core/)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BLUE_WATERS, TPU_V5E, CommGraph, Partition, Topology,
+                        build, select)
+from repro.core.perf_model import (maxrate_internode_time, model_time,
+                                   model_time_closed, single_message_time)
+from repro.core.schedules import STRATEGIES, ScheduleStats
+from repro.core.simulator import verify
+
+
+# --------------------------------------------------------------------- helpers
+def random_graph(rng, n_nodes, ppn, n, max_need, weights=None):
+    topo = Topology(n_nodes=n_nodes, ppn=ppn)
+    part = Partition.balanced(n, topo)
+    need = []
+    for q in range(topo.n_procs):
+        lo, hi = part.local_range(q)
+        cand = np.setdiff1d(np.arange(n), np.arange(lo, hi))
+        k = int(rng.integers(0, min(max_need, cand.size) + 1))
+        need.append(rng.choice(cand, size=k, replace=False))
+    return CommGraph.from_offproc_columns(part, need, weights=weights)
+
+
+@st.composite
+def graph_params(draw):
+    n_nodes = draw(st.integers(2, 6))
+    ppn = draw(st.integers(1, 6))
+    n = draw(st.integers(n_nodes * ppn, 300))
+    max_need = draw(st.integers(0, 40))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return n_nodes, ppn, n, max_need, seed
+
+
+# ------------------------------------------------------------ delivery property
+@settings(max_examples=60, deadline=None)
+@given(graph_params(), st.sampled_from(STRATEGIES))
+def test_exactly_once_delivery(params, strategy):
+    """Every strategy delivers every needed value exactly once, correctly."""
+    n_nodes, ppn, n, max_need, seed = params
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_nodes, ppn, n, max_need)
+    x = rng.standard_normal(n)
+    verify(build(strategy, g), x)  # raises on any violation
+
+
+@settings(max_examples=40, deadline=None)
+@given(graph_params())
+def test_nap_reduces_internode_traffic(params):
+    """NAP-2/3 inter-node bytes <= standard (dedup); NAP-3 message count is
+    minimal (<= one per ordered node pair) and <= NAP-2 count."""
+    n_nodes, ppn, n, max_need, seed = params
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_nodes, ppn, n, max_need)
+    stats = {s: ScheduleStats.of(build(s, g)) for s in STRATEGIES}
+    assert stats["nap2"].inter_bytes_total <= stats["standard"].inter_bytes_total + 1e-9
+    assert stats["nap3"].inter_bytes_total <= stats["nap2"].inter_bytes_total + 1e-9
+    assert stats["nap3"].inter_msg_count <= n_nodes * (n_nodes - 1)
+    assert stats["nap3"].inter_msg_count <= stats["nap2"].inter_msg_count
+    assert stats["nap2"].inter_msg_count <= stats["standard"].inter_msg_count
+
+
+@settings(max_examples=30, deadline=None)
+@given(graph_params())
+def test_nap2_load_balance_matches_standard_sources(params):
+    """NAP-2 keeps every sending process active: the set of ranks sending
+    inter-node messages under NAP-2 equals the set under standard (paper §3.2:
+    'process loads remain equally balanced to standard')."""
+    n_nodes, ppn, n, max_need, seed = params
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_nodes, ppn, n, max_need)
+
+    def senders(strategy):
+        topo = g.topo
+        return {m.src for k, m in build(strategy, g).all_messages()
+                if not topo.on_same_node(m.src, m.dst)}
+
+    assert senders("nap2") == senders("standard")
+
+
+def test_weighted_graph_matrix_comm():
+    """Matrix rows weigh by nnz; byte accounting follows weights."""
+    rng = np.random.default_rng(3)
+    weights = rng.integers(1, 50, size=400).astype(np.float64) * 12.0 + 16.0
+    g = random_graph(rng, 4, 4, 400, 25, weights=weights)
+    for s in STRATEGIES:
+        res = verify(build(s, g), rng.standard_normal(400))
+        assert res.inter_bytes == pytest.approx(
+            ScheduleStats.of(build(s, g)).inter_bytes_total)
+
+
+# ------------------------------------------------------------------ perf model
+def test_closed_model_reduces_to_maxrate_when_balanced():
+    """Eq. (2) reduces to Eq. (1) under perfect balance (paper §3.3)."""
+    p = BLUE_WATERS
+    s_proc = 8192.0
+    s_node = p.ppn * s_proc
+    # max(s_node/RN, s_proc/Rb) == ppn*s_proc/min(RN, ppn*Rb)
+    lhs = max(s_node / p.RN, s_proc / p.inter[2].Rb)
+    rhs = p.ppn * s_proc / min(p.RN, p.ppn * p.inter[2].Rb)
+    assert lhs == pytest.approx(rhs)
+
+
+def test_single_message_cost_ordering():
+    """Fig. 8: socket < node < network for any size; cost grows with size."""
+    for nbytes in (64, 4096, 1 << 20):
+        ts = single_message_time(BLUE_WATERS, nbytes, "socket")
+        tn = single_message_time(BLUE_WATERS, nbytes, "node")
+        tw = single_message_time(BLUE_WATERS, nbytes, "network")
+        assert ts < tn < tw
+    small = single_message_time(BLUE_WATERS, 64, "network")
+    large = single_message_time(BLUE_WATERS, 1 << 22, "network")
+    assert large > small
+
+
+def test_maxrate_more_active_processes_cheaper():
+    """Fig. 9: spreading one inter-node transfer over more processes is
+    monotonically non-increasing in cost, floored by the NID rate."""
+    total = 4 << 20
+    times = [maxrate_internode_time(BLUE_WATERS, total, k) for k in (1, 2, 4, 8, 16)]
+    assert all(a >= b - 1e-12 for a, b in zip(times, times[1:]))
+    floor = total / BLUE_WATERS.RN
+    assert times[-1] >= floor
+
+
+def test_model_prefers_nap_for_many_small_messages():
+    """Coarse-level regime: many tiny messages -> node-aware wins (Fig. 14)."""
+    rng = np.random.default_rng(7)
+    g = random_graph(rng, 8, 16, 4000, 40)
+    sel = select(g, BLUE_WATERS)
+    assert sel.strategy in ("nap2", "nap3")
+    assert sel.times[sel.strategy] <= sel.times["standard"]
+
+
+def test_model_prefers_standard_for_few_large_messages():
+    """Fine-level regime: each rank talks to 1 neighbor with a huge message."""
+    topo = Topology(n_nodes=4, ppn=4)
+    n = 16 * 4096
+    part = Partition.balanced(n, topo)
+    need = []
+    for q in range(topo.n_procs):
+        # needs a large contiguous chunk from one neighbouring rank only
+        nb = (q + topo.ppn) % topo.n_procs  # rank on another node
+        lo, hi = part.local_range(nb)
+        need.append(np.arange(lo, hi))
+    g = CommGraph(part, [np.asarray(v) for v in need])
+    sel = select(g, BLUE_WATERS)
+    # standard has no extra on-node copy; model must not pick NAP-3 here
+    assert sel.times["standard"] <= sel.times["nap3"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_params())
+def test_models_positive_and_finite(params):
+    n_nodes, ppn, n, max_need, seed = params
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_nodes, ppn, n, max_need)
+    for s in STRATEGIES:
+        sch = build(s, g)
+        t = model_time(sch, TPU_V5E)
+        tc = model_time_closed(ScheduleStats.of(sch), TPU_V5E)
+        assert np.isfinite(t) and t >= 0
+        assert np.isfinite(tc) and tc >= 0
+
+
+# ------------------------------------------------------------------- topology
+def test_topology_basics():
+    t = Topology(n_nodes=3, ppn=4)
+    assert t.n_procs == 12
+    assert t.node_of(7) == 1 and t.local_rank(7) == 3
+    assert list(t.ranks_on_node(2)) == [8, 9, 10, 11]
+    p = Partition.balanced(10, t)
+    assert p.offsets[-1] == 10
+    assert p.owner_of_rows(np.array([0, 9])).tolist() == [0, 9]
+    with pytest.raises(ValueError):
+        Topology(0, 4)

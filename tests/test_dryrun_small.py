@@ -1,0 +1,21 @@
+"""Dry-run machinery test on a small (2,2,2) mesh in a subprocess."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = pathlib.Path(__file__).parent / "dryrun_small_script.py"
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src") + \
+        os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(SCRIPT)], capture_output=True,
+                         text=True, env=env, timeout=1200)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL_OK" in out.stdout
+    assert out.stdout.count("OK ") >= 4

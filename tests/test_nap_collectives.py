@@ -1,0 +1,32 @@
+"""Multi-device shard_map tests — executed in a subprocess so this pytest
+process keeps a single CPU device (device count locks at first jax init)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = pathlib.Path(__file__).parent / "multidev_script.py"
+EXPECTED = [
+    "OK grad_sync",
+    "OK hier_psum",
+    "OK hier_all_gather",
+    "OK hier_all_to_all",
+    "OK halo_exchange",
+    "OK dist_spmv",
+    "OK collective_bytes_ordering",
+    "ALL_OK",
+]
+
+
+@pytest.mark.slow
+def test_multidevice_collectives_subprocess():
+    env = dict(os.environ)
+    root = str(pathlib.Path(__file__).parents[1] / "src")
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(SCRIPT)], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    for marker in EXPECTED:
+        assert marker in out.stdout, f"missing {marker!r} in:\n{out.stdout}"

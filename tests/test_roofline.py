@@ -1,0 +1,77 @@
+"""Roofline extraction tests: HLO collective parsing + term math."""
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (DCI_BW, HBM_BW, ICI_LINK_BW, ICI_LINKS,
+                                   PEAK_FLOPS_BF16, collective_bytes_from_text,
+                                   parse_collectives, roofline_terms)
+
+HLO = """
+HloModule test
+%all-reduce.1 = f32[16,4096]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+%all-gather.2 = (bf16[8,128]{1,0}, bf16[8,128]{1,0}) all-gather(%a, %b), replica_groups=[4,2]<=[8], dimensions={0}
+%all-to-all.3 = f32[2,64]{1,0} all-to-all(%c), replica_groups={{0,4},{1,5},{2,6},{3,7}}
+%all-gather-start.4 = f32[100]{0} all-gather-start(%d), replica_groups={{0,1}}
+%all-gather-done.5 = f32[100]{0} all-gather-done(%all-gather-start.4)
+%reduce-scatter.6 = f32[10]{0} reduce-scatter(%e), replica_groups={}
+%get-tuple-element.9 = f32[2,64]{1,0} get-tuple-element(%all-to-all.3), index=0
+"""
+
+
+def test_parse_collectives_ops_and_bytes():
+    infos = parse_collectives(HLO, pod_size=4, n_devices=8)
+    ops = [i.op for i in infos]
+    assert ops.count("all-reduce") == 1
+    assert ops.count("all-gather") == 2      # -start counted, -done skipped
+    assert ops.count("all-to-all") == 1
+    assert ops.count("reduce-scatter") == 1
+    by = {i.op: i for i in infos}
+    assert by["all-reduce"].bytes == 16 * 4096 * 4
+    # tuple result: both elements summed
+    assert by["all-gather"].bytes in (8 * 128 * 2 * 2, 100 * 4)
+    assert by["all-to-all"].bytes == 2 * 64 * 4
+
+
+def test_cross_pod_classification():
+    infos = parse_collectives(HLO, pod_size=4, n_devices=8)
+    by_op = {}
+    for i in infos:
+        by_op.setdefault(i.op, []).append(i)
+    # all-reduce groups {0..3},{4..7} stay inside pods of 4
+    assert not by_op["all-reduce"][0].crosses_pod
+    # all-to-all groups {0,4} cross pods
+    assert by_op["all-to-all"][0].crosses_pod
+    # iota [4,2]<=[8]: groups {0,1},{2,3},... stay within pod
+    ag = [i for i in by_op["all-gather"] if i.group_size == 2]
+    assert any(not i.crosses_pod for i in ag)
+    # empty replica_groups = all devices -> crosses (8 devices, pod 4)
+    assert by_op["reduce-scatter"][0].crosses_pod
+
+
+def test_iota_transpose_groups():
+    hlo = ('%all-gather.9 = f32[4]{0} all-gather(%x), '
+           'replica_groups=[2,4]<=[4,2]T(1,0), dimensions={0}')
+    infos = parse_collectives(hlo, pod_size=4, n_devices=8)
+    # [4,2]T(1,0) → device order 0,2,4,6,1,3,5,7 → groups {0,2,4,6},{1,3,5,7}
+    assert infos[0].crosses_pod
+    assert infos[0].group_size == 4
+
+
+def test_collective_totals():
+    d = collective_bytes_from_text(HLO, pod_size=4, n_devices=8)
+    assert d["n_collectives"] == 5
+    assert d["total_bytes"] == sum(
+        [16 * 4096 * 4, 8 * 128 * 2 * 2, 2 * 64 * 4, 100 * 4, 10 * 4])
+    assert 0 < d["cross_slow_bytes"] < d["total_bytes"]
+
+
+def test_roofline_terms_math():
+    cost = {"flops": 1.97e14, "bytes accessed": 8.19e11}
+    t = roofline_terms(cost, "", n_chips=256, pod_size=256,
+                       model_flops=1.97e14 * 256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.useful_flops_fraction == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    # roofline fraction: ideal == 1s, bound == 1s → 1.0
+    assert t.roofline_fraction == pytest.approx(1.0)
