@@ -1,0 +1,94 @@
+"""Solve-phase benchmark: the device-resident fused V-cycle, standard vs
+NAP-2 vs NAP-3 vs model-selected per-level strategies (paper Figs. 16/17's
+solve-phase claim, executed rather than simulated).
+
+Emits the ``name,us_per_call,derived`` rows used by :mod:`benchmarks.run`,
+and — when run standalone — a ``BENCH_dist_solve.json`` file with the same
+rows as structured records:
+
+    PYTHONPATH=src python -m benchmarks.dist_solve [--smoke] [--out PATH]
+
+``--smoke`` (or ``REPRO_BENCH_SMOKE=1``) shrinks the problem and iteration
+count so the whole benchmark runs in seconds (the tier-1 smoke test uses it).
+Heavy imports are deferred so the standalone entrypoint can force an 8-way
+host mesh before JAX initializes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+STRATEGIES = ("standard", "nap2", "nap3", "auto")
+
+
+def _mesh_shape(n_devices: int) -> tuple[int, int]:
+    if n_devices >= 4 and n_devices % 2 == 0:
+        return 2, n_devices // 2
+    return 1, n_devices
+
+
+def rows(smoke: bool | None = None, cycles: int | None = None):
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+
+    from repro.amg import setup, solve
+    from repro.amg.dist_solve import DistHierarchy
+    from repro.amg.problems import laplace_3d
+    from repro.core import BLUE_WATERS
+    import numpy as np
+
+    n = 8 if smoke else 12
+    cycles = cycles or (3 if smoke else 10)
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    A = laplace_3d(n)
+    h = setup(A, solver="rs")
+    b = A.matvec(np.ones(A.nrows))
+    out = []
+    for strat in STRATEGIES:
+        kw = ({"params": BLUE_WATERS} if strat == "auto"
+              else {"strategy": strat})
+        dh = DistHierarchy.build(h, n_pods, lanes, **kw)
+        solve(h, b, maxiter=1, tol=0.0, backend="dist", dist=dh)  # compile
+        t0 = time.perf_counter()
+        res = solve(h, b, maxiter=cycles, tol=0.0, backend="dist", dist=dh)
+        dt = time.perf_counter() - t0
+        per_level = ";".join(
+            f"L{r['level']}.{r['op']}={r['strategy']}"
+            for r in dh.selection_table())
+        out.append((f"dist_solve_{strat}", dt / cycles * 1e6,
+                    f"n={A.nrows};mesh={n_pods}x{lanes};cycles={cycles};"
+                    f"conv={res.avg_conv_factor:.3f};{per_level}"))
+        if strat == "auto":
+            # one row per (level, op): the model-selected strategy + its
+            # modeled comm seconds (the quantity the paper's Figs. 14/15 plot)
+            for r in dh.selection_table():
+                modeled = r["modeled"].get(r["strategy"], 0.0)
+                out.append((f"dist_solve_auto_L{r['level']}_{r['op']}",
+                            modeled * 1e6, r["strategy"]))
+    return out
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true")
+    parser.add_argument("--out", default="BENCH_dist_solve.json")
+    args = parser.parse_args(argv)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    data = rows(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in data:
+        print(f"{name},{us:.2f},{derived}")
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "dist_solve",
+                   "rows": [{"name": n, "us_per_call": u, "derived": d}
+                            for n, u, d in data]}, f, indent=2)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,8 @@ Prints ``name,us_per_call,derived`` CSV."""
 import sys
 import time
 
-from . import (amg_levels, amg_scaling, comm_strategies, lm_roofline,
-               pingpong_model, ptap_sweeps)
+from . import (amg_levels, amg_scaling, comm_strategies, dist_solve,
+               lm_roofline, pingpong_model, ptap_sweeps)
 from repro.core.perf_model import BLUE_WATERS, QUARTZ
 
 MODULES = [
@@ -17,6 +17,7 @@ MODULES = [
     ("fig20_weak", lambda: amg_scaling.rows("graddiv", BLUE_WATERS,
                                             weak=True)),
     ("fig21", lambda: ptap_sweeps.rows()),
+    ("dist_solve", lambda: dist_solve.rows(smoke=True)),
     ("roofline", lambda: lm_roofline.rows()),
 ]
 

@@ -1,8 +1,26 @@
-"""Algebraic multigrid substrate (setup + solve), pure numpy host-side, with
-distributed communication analysis via :mod:`repro.core`."""
+"""Algebraic multigrid substrate (setup + solve).
+
+Host side (pure numpy): CSR kernels, setup (Algorithm 1), the reference
+V-cycle / stationary / PCG solvers (Algorithm 2), and the distributed
+communication analysis of :mod:`repro.amg.dist`.
+
+Device side: :class:`~repro.amg.dist_solve.DistHierarchy` lowers a hierarchy
+onto a (pods × lanes) mesh — per level, each of {A, P, R} gets its own
+communication graph, a strategy (standard/NAP-2/NAP-3) chosen from the
+paper's performance models, and a halo plan — and ``solve``/``pcg`` with
+``backend="dist"`` run the whole V-cycle as one jitted shard_map program.
+``DistHierarchy`` is exported lazily so numpy-only users never import JAX.
+"""
 from .csr import CSR
 from .hierarchy import Hierarchy, Level, setup
 from .solve import SolveOptions, SolveResult, pcg, solve, vcycle
 
 __all__ = ["CSR", "Hierarchy", "Level", "setup", "SolveOptions", "SolveResult",
-           "pcg", "solve", "vcycle"]
+           "pcg", "solve", "vcycle", "DistHierarchy"]
+
+
+def __getattr__(name):
+    if name == "DistHierarchy":          # lazy: pulls in jax
+        from .dist_solve import DistHierarchy
+        return DistHierarchy
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,7 +2,12 @@
 operation, strategy selection (paper §4), and modeled phase costs.
 
 This is the glue between :mod:`repro.amg` (numerics) and :mod:`repro.core`
-(the paper's node-aware schedules + max-rate models).
+(the paper's node-aware schedules + max-rate models).  Everything here is
+host-side analysis (numpy only); the device execution of the same selections
+lives in :mod:`repro.amg.dist_solve`, which consumes
+:func:`vector_comm_graph` / :func:`rect_vector_graph` per level and per
+operator {A, P, R} to pick each operation's strategy with
+:func:`repro.core.selector.select` before compiling the fused V-cycle.
 """
 from __future__ import annotations
 
@@ -82,11 +87,11 @@ def analyze_hierarchy(h: Hierarchy, topo: Topology, params: MachineParams,
             continue
         # interp P·e: vector comm of coarse vector e (columns of P off-proc)
         cpart = Partition.balanced(lv.P.ncols, topo)
-        gp = _rect_vector_graph(lv.P, part, cpart)
+        gp = rect_vector_graph(lv.P, part, cpart)
         out.append(OpComm(l, "interp", gp, select(gp, params, strategies)))
         # restrict Pᵀ·r: vector comm of fine vector r
         rpart = part
-        gr = _rect_vector_graph(lv.R, cpart, rpart)
+        gr = rect_vector_graph(lv.R, cpart, rpart)
         out.append(OpComm(l, "restrict", gr, select(gr, params, strategies)))
         # setup SpGEMMs
         gap = matrix_comm_graph(lv.A, lv.P, part)
@@ -98,7 +103,7 @@ def analyze_hierarchy(h: Hierarchy, topo: Topology, params: MachineParams,
     return out
 
 
-def _rect_vector_graph(M: CSR, row_part: Partition, col_part: Partition) -> CommGraph:
+def rect_vector_graph(M: CSR, row_part: Partition, col_part: Partition) -> CommGraph:
     """Vector comm for y = M·x where rows of M follow row_part and x follows
     col_part (rectangular operators P and R)."""
     offp = []

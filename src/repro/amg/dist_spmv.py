@@ -1,29 +1,174 @@
 """Device-side distributed SpMV: the paper's solve-phase hot loop on a
 hierarchical TPU mesh.
 
-Setup (host, once per level — like an MPI communicator build):
-  * row-partition A over the (pods × lanes) device grid,
+Setup (host, once per level and operator — like an MPI communicator build):
+  * row-partition the operator over the (pods × lanes) device grid,
   * convert each rank's rows to padded ELL with columns remapped to
     [local | halo] positions,
   * build a :class:`~repro.core.nap_collectives.HaloPlan` for the selected
     strategy (standard / nap2 / nap3).
 
-Execute (device, every smoother sweep / residual / restrict):
-  shard_map body = halo_exchange → ELL SpMV (optionally the Pallas kernel).
+Operators may be **rectangular**: ``y = M·x`` with the rows of ``M`` (and
+``y``) following ``row_part`` while ``x`` follows ``col_part``.  This is what
+lets restriction (R: coarse×fine) and interpolation (P: fine×coarse) run as
+distributed SpMVs with their own communication graphs and halo plans instead
+of host matvecs — each level of the AMG hierarchy gets one
+:class:`DistOperator` per {A, P, R}, each with its own model-selected
+strategy (see :mod:`repro.amg.dist_solve`).
+
+Execute (device, every smoother sweep / residual / restrict / interpolate):
+  shard_map body = halo_exchange → ELL SpMV (inline jnp gather form, or the
+  Pallas :func:`repro.kernels.spmv.spmv.ell_spmv` kernel).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.comm_graph import CommGraph
+from ..core.compat import shard_map
 from ..core.nap_collectives import HaloPlan, build_halo_plan, halo_exchange
 from ..core.topology import Partition, Topology
 from .csr import CSR
+from .dist import rect_vector_graph
+
+
+def _ell_block(M: CSR, row_part: Partition, col_part: Partition, d: int,
+               need_sorted: np.ndarray, rows_local: int, x_local: int, K: int):
+    """One device's ELL block with columns remapped to [local | halo]."""
+    rlo, rhi = row_part.local_range(d)
+    clo, chi = col_part.local_range(d)
+    sub = M.submatrix_rows(rlo, rhi)
+    cols = np.full((rows_local, K), -1, dtype=np.int32)
+    vals = np.zeros((rows_local, K), dtype=np.float64)
+    if sub.nnz:
+        lens = np.diff(sub.indptr)
+        rows = np.repeat(np.arange(sub.nrows, dtype=np.int64), lens)
+        k = np.arange(sub.nnz, dtype=np.int64) - np.repeat(sub.indptr[:-1], lens)
+        c = sub.indices
+        local = (c >= clo) & (c < chi)
+        halo_pos = np.searchsorted(need_sorted, c)
+        pos = np.where(local, c - clo, x_local + halo_pos).astype(np.int32)
+        cols[rows, k] = pos
+        vals[rows, k] = sub.data
+    return cols, vals
+
+
+@dataclasses.dataclass
+class DistOperator:
+    """Host-side container for one distributed (possibly rectangular) operator.
+
+    Device-stacked arrays carry a leading ``n_devices`` dim and are fed to the
+    fused shard_map program sharded over the (pod, lane) device axis; the
+    :class:`HaloPlan` and partitions are static setup-time metadata.
+    """
+
+    strategy: str
+    plan: HaloPlan               # halo plan in x-space (col_part layout)
+    row_part: Partition          # layout of y (output)
+    col_part: Partition          # layout of x (input)
+    rows_local: int              # padded local row count per device
+    ell_cols: np.ndarray         # [D, rows_local, K] int32 into [local|halo], -1 pad
+    ell_vals: np.ndarray         # [D, rows_local, K]
+    send_idx: np.ndarray         # per-device slices of the plan arrays
+    recv_sel: np.ndarray
+    pool_sel: np.ndarray         # zeros placeholder when plan.pool_sel is None
+
+    @property
+    def n_devices(self) -> int:
+        return self.plan.n_devices
+
+    def device_arrays(self) -> dict[str, np.ndarray]:
+        """The sharded inputs the shard_map body needs for one matvec."""
+        return {"cols": self.ell_cols, "vals": self.ell_vals,
+                "send": self.send_idx, "recv": self.recv_sel,
+                "psel": self.pool_sel}
+
+    def apply(self, arrs: dict[str, jnp.ndarray], x_loc: jnp.ndarray,
+              use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+        """Inside shard_map: halo exchange + local ELL SpMV for this device.
+
+        ``arrs`` holds this device's slices of :meth:`device_arrays` (leading
+        device dim already squeezed).  ``use_kernel`` routes the local SpMV
+        through the Pallas ELL kernel; otherwise the inline gather form runs.
+        """
+        psel = None if self.plan.pool_sel is None else arrs["psel"]
+        halo = halo_exchange(x_loc, self.plan, arrs["send"], arrs["recv"], psel)
+        xfull = jnp.concatenate([x_loc, halo])
+        cols, vals = arrs["cols"], arrs["vals"]
+        if use_kernel:
+            from ..kernels.spmv.spmv import ell_spmv
+            return ell_spmv(cols, vals, xfull, interpret=interpret)
+        safe = jnp.maximum(cols, 0)
+        contrib = jnp.where(cols >= 0, vals * xfull[safe], 0.0)
+        return contrib.sum(axis=1)
+
+    # ------------------------------------------------------- host-side layout
+    def scatter_x(self, x: np.ndarray, dtype=None) -> np.ndarray:
+        """Global x (col_part layout) -> [D, x_local] padded device layout."""
+        if np.shape(x) != (self.col_part.n,):
+            raise ValueError(f"expected x of shape ({self.col_part.n},), "
+                             f"got {np.shape(x)}")
+        D = self.n_devices
+        dtype = dtype or self.ell_vals.dtype
+        out = np.zeros((D, self.plan.local_n), dtype=dtype)
+        for d in range(D):
+            lo, hi = self.col_part.local_range(d)
+            out[d, : hi - lo] = x[lo:hi]
+        return out
+
+    def gather_y(self, y_dev: np.ndarray) -> np.ndarray:
+        """[D, rows_local] device layout -> global y (row_part layout)."""
+        y_dev = np.asarray(y_dev)
+        out = np.zeros(self.row_part.n, dtype=y_dev.dtype)
+        for d in range(self.n_devices):
+            lo, hi = self.row_part.local_range(d)
+            out[lo:hi] = y_dev[d, : hi - lo]
+        return out
+
+
+def build_dist_operator(M: CSR, n_pods: int, lanes: int, strategy: str,
+                        row_part: Partition | None = None,
+                        col_part: Partition | None = None,
+                        graph: CommGraph | None = None,
+                        dtype=jnp.float32) -> DistOperator:
+    """Build the device form of ``M`` (square or rectangular) for one strategy.
+
+    ``graph`` may be passed in when the caller already built/selected on it
+    (the per-level selection path) — it must be ``rect_vector_graph(M, ...)``.
+    """
+    topo = Topology(n_nodes=n_pods, ppn=lanes)
+    row_part = row_part or Partition.balanced(M.nrows, topo)
+    col_part = col_part or Partition.balanced(M.ncols, topo)
+    D = topo.n_procs
+    if graph is None:
+        graph = rect_vector_graph(M, row_part, col_part)
+    plan = build_halo_plan(graph, n_pods, lanes, strategy)
+    need_sorted = [np.sort(graph.need[d]) for d in range(D)]
+
+    rows_local = row_part.max_local_size
+    x_local = plan.local_n
+    K = int(np.diff(M.indptr).max(initial=1)) or 1
+    cols = np.zeros((D, rows_local, K), dtype=np.int32)
+    vals = np.zeros((D, rows_local, K), dtype=np.float64)
+    for d in range(D):
+        cols[d], vals[d] = _ell_block(M, row_part, col_part, d,
+                                      need_sorted[d], rows_local, x_local, K)
+    psel = plan.pool_sel if plan.pool_sel is not None else np.zeros(
+        (D, 1), dtype=np.int32)
+    return DistOperator(strategy=strategy, plan=plan, row_part=row_part,
+                        col_part=col_part, rows_local=rows_local,
+                        ell_cols=cols, ell_vals=vals.astype(dtype),
+                        send_idx=plan.send_idx, recv_sel=plan.recv_sel,
+                        pool_sel=psel)
+
+
+# --------------------------------------------------------------------------
+# Stand-alone square SpMV (kept for benchmarks/tests of a single operator)
+# --------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -33,107 +178,51 @@ class DistSpMV:
     plan: HaloPlan
     part: Partition
     mesh: jax.sharding.Mesh
-    # device-stacked arrays (leading dim = n_devices)
-    ell_cols: np.ndarray     # [D, local_n, K] int32 into [local | halo], -1 pad
-    ell_vals: np.ndarray     # [D, local_n, K] float32/64
-    send_idx: np.ndarray
-    recv_sel: np.ndarray
-    pool_sel: np.ndarray | None
+    op: DistOperator
     fn: callable = None      # jitted shard_map spmv
 
+    @property
+    def ell_cols(self) -> np.ndarray:
+        return self.op.ell_cols
+
+    @property
+    def ell_vals(self) -> np.ndarray:
+        return self.op.ell_vals
+
     def scatter_x(self, x: np.ndarray) -> np.ndarray:
-        """Global vector -> [D, local_n] padded device layout."""
-        D = self.plan.n_devices
-        out = np.zeros((D, self.plan.local_n), dtype=self.ell_vals.dtype)
-        for d in range(D):
-            lo, hi = self.part.local_range(d)
-            out[d, : hi - lo] = x[lo:hi]
-        return out
+        return self.op.scatter_x(x)
 
     def gather_y(self, y_dev: np.ndarray) -> np.ndarray:
-        D = self.plan.n_devices
-        out = np.zeros(self.part.n, dtype=np.asarray(y_dev).dtype)
-        for d in range(D):
-            lo, hi = self.part.local_range(d)
-            out[lo:hi] = np.asarray(y_dev)[d, : hi - lo]
-        return out
+        return self.op.gather_y(y_dev)
 
     def matvec(self, x: np.ndarray) -> np.ndarray:
         return self.gather_y(self.fn(self.scatter_x(x)))
 
 
-def _ell_local(A: CSR, part: Partition, d: int, need_sorted: np.ndarray,
-               local_n: int, K: int):
-    lo, hi = part.local_range(d)
-    sub = A.submatrix_rows(lo, hi)
-    cols = np.full((local_n, K), -1, dtype=np.int32)
-    vals = np.zeros((local_n, K), dtype=np.float64)
-    halo_pos = {int(g): i for i, g in enumerate(need_sorted)}
-    for i in range(sub.nrows):
-        s = slice(int(sub.indptr[i]), int(sub.indptr[i + 1]))
-        cs, vs = sub.indices[s], sub.data[s]
-        for k, (c, v) in enumerate(zip(cs, vs)):
-            c = int(c)
-            cols[i, k] = (c - lo) if lo <= c < hi else local_n + halo_pos[c]
-            vals[i, k] = v
-    return cols, vals
-
-
 def build_dist_spmv(A: CSR, n_pods: int, lanes: int, strategy: str,
                     mesh: jax.sharding.Mesh | None = None,
-                    dtype=jnp.float32) -> DistSpMV:
-    topo = Topology(n_nodes=n_pods, ppn=lanes)
-    part = Partition.balanced(A.nrows, topo)
-    D = topo.n_procs
-    offp = []
-    for p in range(D):
-        lo, hi = part.local_range(p)
-        offp.append(A.offproc_columns(lo, hi, lo, hi))
-    graph = CommGraph.from_offproc_columns(part, offp)
-    plan = build_halo_plan(graph, n_pods, lanes, strategy)
-    need_sorted = [np.sort(graph.need[d]) for d in range(D)]
-
-    local_n = plan.local_n
-    K = int(np.diff(A.indptr).max(initial=1)) or 1
-    cols = np.zeros((D, local_n, K), dtype=np.int32)
-    vals = np.zeros((D, local_n, K), dtype=np.float64)
-    for d in range(D):
-        cols[d], vals[d] = _ell_local(A, part, d, need_sorted[d], local_n, K)
-
+                    dtype=jnp.float32, use_kernel: bool = False) -> DistSpMV:
+    op = build_dist_operator(A, n_pods, lanes, strategy, dtype=dtype)
     if mesh is None:
         mesh = jax.make_mesh((n_pods, lanes), ("pod", "lane"))
 
     P = jax.sharding.PartitionSpec
     dev_spec = P(("pod", "lane"))
+    arrs = op.device_arrays()
 
-    def body(x_loc, ecols, evals, sidx, rsel, psel):
+    def body(x_loc, a):
         # squeeze the per-device leading dim added by shard_map
-        x_loc, ecols, evals = x_loc[0], ecols[0], evals[0]
-        sidx, rsel = sidx[0], rsel[0]
-        psel = None if plan.pool_sel is None else psel[0]
-        halo = halo_exchange(x_loc, plan, sidx, rsel, psel)
-        xfull = jnp.concatenate([x_loc, halo])
-        safe = jnp.maximum(ecols, 0)
-        contrib = jnp.where(ecols >= 0, evals * xfull[safe], 0.0)
-        return contrib.sum(axis=1)[None]
+        x_loc = x_loc[0]
+        a = jax.tree.map(lambda v: v[0], a)
+        return op.apply(a, x_loc, use_kernel=use_kernel,
+                        interpret=jax.default_backend() != "tpu")[None]
 
-    psel_arr = plan.pool_sel if plan.pool_sel is not None else np.zeros(
-        (D, 1), dtype=np.int32)
-    in_specs = (dev_spec,) * 6
     fn = jax.jit(
-        jax.shard_map(
-            lambda x, *a: body(x, *a),
-            mesh=mesh, in_specs=in_specs, out_specs=dev_spec,
-            check_vma=False,
-        ),
-    )
-    ell_vals = vals.astype(dtype)
+        shard_map(body, mesh=mesh, in_specs=(dev_spec, dev_spec),
+                  out_specs=dev_spec, check_vma=False))
 
     def matvec_dev(x_dev):
-        return fn(jnp.asarray(x_dev, dtype=dtype), cols, ell_vals,
-                  plan.send_idx, plan.recv_sel, psel_arr)
+        return fn(jnp.asarray(x_dev, dtype=dtype), arrs)
 
-    return DistSpMV(plan=plan, part=part, mesh=mesh, ell_cols=cols,
-                    ell_vals=ell_vals, send_idx=plan.send_idx,
-                    recv_sel=plan.recv_sel, pool_sel=plan.pool_sel,
+    return DistSpMV(plan=op.plan, part=op.row_part, mesh=mesh, op=op,
                     fn=matvec_dev)

@@ -32,6 +32,34 @@ def l1_jacobi(A: CSR, x: np.ndarray, b: np.ndarray, iterations: int = 1) -> np.n
     return x
 
 
+def chebyshev_coeffs(rho: float) -> tuple[float, float, float]:
+    """(theta, delta, sigma) for D⁻¹A bounds [ρ/30, 1.1ρ] (hypre-style)."""
+    lmax, lmin = 1.1 * rho, rho / 30.0
+    theta, delta = 0.5 * (lmax + lmin), 0.5 * (lmax - lmin)
+    return theta, delta, theta / delta
+
+
+def chebyshev_recurrence(matvec, dinv, x, b, degree: int,
+                         theta: float, delta: float, sigma: float):
+    """The Chebyshev smoothing recurrence, matvec-agnostic.
+
+    Shared by the host backend (numpy ``A.matvec``) and the device backend
+    (distributed SpMV inside shard_map, :mod:`repro.amg.dist_solve`) so the
+    two can never drift apart; works on any array type supporting ``+``/``*``.
+    """
+    r = dinv * (b - matvec(x))
+    d = r / theta
+    x = x + d
+    rho_prev = 1.0 / sigma
+    for _ in range(degree - 1):
+        rho_k = 1.0 / (2.0 * sigma - rho_prev)
+        r = r - dinv * matvec(d)
+        d = (rho_k * rho_prev) * d + (2.0 * rho_k / delta) * r
+        x = x + d
+        rho_prev = rho_k
+    return x
+
+
 def chebyshev(A: CSR, x: np.ndarray, b: np.ndarray, degree: int = 3,
               rho: float | None = None, dinv: np.ndarray | None = None) -> np.ndarray:
     """Chebyshev smoothing on D⁻¹A over [ρ/30, 1.1ρ] (hypre-style)."""
@@ -39,17 +67,6 @@ def chebyshev(A: CSR, x: np.ndarray, b: np.ndarray, degree: int = 3,
         d = A.diagonal()
         dinv = 1.0 / np.where(d == 0, 1.0, d)
     rho = rho or estimate_rho_DinvA(A)
-    lmax, lmin = 1.1 * rho, rho / 30.0
-    theta, delta = 0.5 * (lmax + lmin), 0.5 * (lmax - lmin)
-    sigma = theta / delta
-    r = dinv * (b - A.matvec(x))
-    d = r / theta
-    x = x + d
-    rho_prev = 1.0 / sigma
-    for _ in range(degree - 1):
-        rho_k = 1.0 / (2.0 * sigma - rho_prev)
-        r = r - dinv * A.matvec(d)
-        d = (rho_k * rho_prev) * d + (2.0 * rho_k / delta) * r
-        x = x + d
-        rho_prev = rho_k
-    return x
+    theta, delta, sigma = chebyshev_coeffs(rho)
+    return chebyshev_recurrence(A.matvec, dinv, x, b, degree,
+                                theta, delta, sigma)

@@ -3,6 +3,17 @@
 The smoother is SpMV-based (Jacobi/Chebyshev), so every relaxation sweep,
 residual, restriction and interpolation reuses the level's communication
 pattern — the operations whose strategy the paper's models select.
+
+Two backends share this API:
+
+* ``backend="host"`` — the reference numpy implementation below.
+* ``backend="dist"`` — the device-resident path
+  (:mod:`repro.amg.dist_solve`): the whole V-cycle runs as one jitted
+  shard_map program over a (pods × lanes) mesh, every matvec using the
+  level's model-selected node-aware strategy.  Pass ``dist=`` either a
+  prebuilt :class:`~repro.amg.dist_solve.DistHierarchy` (reused across
+  calls) or a dict of ``DistHierarchy.build`` kwargs
+  (e.g. ``dict(n_pods=2, lanes=4)``).
 """
 from __future__ import annotations
 
@@ -32,10 +43,23 @@ def _relax(A: CSR, x, b, opts: SolveOptions, sweeps: int):
     return chebyshev(A, x, b, degree=opts.cheby_degree * sweeps)
 
 
+def _dist_hierarchy(h, dist):
+    from .dist_solve import _ensure_dist
+    return _ensure_dist(h, dist)
+
+
 def vcycle(h: Hierarchy, b: np.ndarray, x: np.ndarray | None = None,
-           opts: SolveOptions | None = None, level: int = 0) -> np.ndarray:
+           opts: SolveOptions | None = None, level: int = 0,
+           backend: str = "host", dist=None) -> np.ndarray:
     """One V(pre,post)-cycle (Algorithm 2)."""
     opts = opts or SolveOptions()
+    if backend == "dist":
+        from .dist_solve import dist_vcycle
+        if x is not None or level != 0:
+            raise ValueError("dist vcycle starts from x=0 at level 0")
+        return dist_vcycle(_dist_hierarchy(h, dist), b, opts)
+    if backend != "host":
+        raise ValueError(f"unknown backend {backend!r}")
     lv = h.levels[level]
     if x is None:
         x = np.zeros_like(b)
@@ -66,8 +90,15 @@ class SolveResult:
 
 
 def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
-          opts: SolveOptions | None = None, x0: np.ndarray | None = None) -> SolveResult:
+          opts: SolveOptions | None = None, x0: np.ndarray | None = None,
+          backend: str = "host", dist=None) -> SolveResult:
     """Stationary AMG iteration: x <- x + V(A, b - Ax)."""
+    if backend == "dist":
+        from .dist_solve import dist_solve
+        return dist_solve(_dist_hierarchy(h, dist), b, tol=tol,
+                          maxiter=maxiter, opts=opts, x0=x0)
+    if backend != "host":
+        raise ValueError(f"unknown backend {backend!r}")
     A = h.levels[0].A
     x = np.zeros_like(b) if x0 is None else x0.copy()
     nb = float(np.linalg.norm(b)) or 1.0
@@ -81,8 +112,15 @@ def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
 
 
 def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
-        opts: SolveOptions | None = None) -> SolveResult:
+        opts: SolveOptions | None = None,
+        backend: str = "host", dist=None) -> SolveResult:
     """AMG-preconditioned conjugate gradients."""
+    if backend == "dist":
+        from .dist_solve import dist_pcg
+        return dist_pcg(_dist_hierarchy(h, dist), b, tol=tol,
+                        maxiter=maxiter, opts=opts)
+    if backend != "host":
+        raise ValueError(f"unknown backend {backend!r}")
     A = h.levels[0].A
     x = np.zeros_like(b)
     r = b.copy()

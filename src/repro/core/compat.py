@@ -1,0 +1,32 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern public API (``jax.shard_map`` with ``check_vma``),
+but the container may carry an older JAX where ``shard_map`` still lives in
+``jax.experimental.shard_map`` and the replication-check kwarg is named
+``check_rep``.  Route every shard_map construction through :func:`shard_map`
+so call sites stay on the new spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                               # 0.4.x fallback
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on any supported JAX version (``check_vma`` spelling)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
+def axis_size(axis) -> int:
+    """Size of a named mesh axis inside a shard_map body."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    # psum of the literal 1 over a named axis folds to the static axis size
+    return jax.lax.psum(1, axis)

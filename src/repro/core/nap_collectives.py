@@ -26,15 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .comm_graph import CommGraph
+from .compat import axis_size as _axis_size
 from .topology import Partition, Topology
 
 # --------------------------------------------------------------------------
 # Generic hierarchical collectives (LM training / MoE consumers)
 # --------------------------------------------------------------------------
-
-
-def _axis_size(axis) -> int:
-    return jax.lax.axis_size(axis)
 
 
 def hier_psum(x: jnp.ndarray, slow_axis: str, fast_axis: str,

@@ -122,7 +122,8 @@ def moe_ep_shardmap(p, cfg, x, mesh, dp_axes=("data",), ep_axes=("data",),
     # d_ff sharding over tp_axis rides on dims 2 (gate/up) and 1 (down)
     w_spec = P(w_spec[0], None, tp_axis)
     wd_spec = P(wd_spec[0], tp_axis, None)
-    return jax.shard_map(
+    from ..core.compat import shard_map
+    return shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(), w_spec, w_spec, wd_spec),
         out_specs=x_spec, check_vma=False,
@@ -140,8 +141,9 @@ def moe_ffn_ep(p, cfg, x, mesh_axes=("model",), nap: bool = False,
     """
     T, d = x.shape
     m = 1
+    from ..core.compat import axis_size
     for ax in mesh_axes:
-        m *= jax.lax.axis_size(ax)
+        m *= axis_size(ax)
     E = cfg.n_experts
     e_loc = E // m
     probs, sel = _route(x, p["router"], cfg.top_k)

@@ -1,0 +1,72 @@
+"""Minimal deterministic fallback for the subset of the `hypothesis` API the
+test-suite uses (``given``, ``settings``, ``strategies.integers`` /
+``sampled_from`` / ``composite``).
+
+Loaded by ``conftest.py`` only when the real `hypothesis` package is missing
+(the CI container has no network to install extras).  This is NOT a
+property-testing engine: every ``@given`` test runs a capped number of
+seeded pseudo-random examples with no shrinking, so failures reproduce
+deterministically but exploration is shallower than real hypothesis.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+MAX_EXAMPLES_CAP = 16
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self.draw = draw_fn
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def _composite(fn):
+    @functools.wraps(fn)
+    def build(*args, **kwargs):
+        def draw_fn(rng):
+            return fn(lambda s: s.draw(rng), *args, **kwargs)
+        return _Strategy(draw_fn)
+    return build
+
+
+def settings(max_examples: int = MAX_EXAMPLES_CAP, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = min(MAX_EXAMPLES_CAP,
+                    getattr(run, "_hyp_max_examples",
+                            getattr(fn, "_hyp_max_examples", MAX_EXAMPLES_CAP)))
+            for i in range(n):
+                rng = np.random.default_rng(0xC0FFEE + i)
+                fn(*args, *[s.draw(rng) for s in strats], **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        del run.__wrapped__
+        run.__signature__ = inspect.Signature()
+        return run
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+strategies.composite = _composite

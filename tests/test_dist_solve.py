@@ -1,0 +1,160 @@
+"""Distributed solve-phase tests.
+
+Host-side (no extra devices): rectangular halo-plan/ELL correctness, the
+per-level strategy-selection table, and backend dispatch on a 1x1 mesh.
+Multi-device parity for all three strategies runs in a subprocess
+(``dist_solve_script.py``) so this pytest process keeps one CPU device.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.amg import SolveOptions, pcg, setup, solve
+from repro.amg.problems import laplace_3d, laplace_3d_7pt
+from repro.core import BLUE_WATERS
+from repro.core.topology import Partition, Topology
+
+SCRIPT = pathlib.Path(__file__).parent / "dist_solve_script.py"
+EXPECTED = [
+    "OK solve_standard", "OK pcg_standard",
+    "OK solve_nap2", "OK pcg_nap2",
+    "OK solve_nap3", "OK pcg_nap3",
+    "OK auto_select", "OK pallas_path", "OK chebyshev",
+    "ALL_OK",
+]
+
+
+@pytest.fixture(scope="module")
+def rect_ops():
+    """P and R DistOperators (all strategies) for a small RS hierarchy."""
+    from repro.amg.dist import rect_vector_graph
+    from repro.amg.dist_spmv import build_dist_operator
+
+    A = laplace_3d_7pt(6)
+    h = setup(A, solver="rs", max_coarse=30)
+    P, R = h.levels[0].P, h.levels[0].R
+    topo = Topology(n_nodes=2, ppn=2)
+    fp = Partition.balanced(P.nrows, topo)
+    cp = Partition.balanced(P.ncols, topo)
+    out = []
+    for M, rp_, cp_ in ((P, fp, cp), (R, cp, fp)):
+        g = rect_vector_graph(M, rp_, cp_)
+        for strat in ("standard", "nap2", "nap3"):
+            op = build_dist_operator(M, 2, 2, strat, row_part=rp_,
+                                     col_part=cp_, dtype=np.float64)
+            out.append((M, g, op, strat))
+    return out
+
+
+def test_rect_halo_plan_and_ell_reconstruction(rect_ops):
+    """The rectangular lowering is lossless: per-device ELL blocks with
+    [local | halo] column remapping reassemble to the exact operator, and
+    every halo slot maps to an owned entry of some other device."""
+    for M, g, op, strat in rect_ops:
+        dense = np.zeros(M.shape)
+        x_local = op.plan.local_n
+        for d in range(op.n_devices):
+            rlo, rhi = op.row_part.local_range(d)
+            clo, chi = op.col_part.local_range(d)
+            need = np.sort(g.need[d])
+            cols, vals = op.ell_cols[d], op.ell_vals[d]
+            local = (cols >= 0) & (cols < x_local)
+            halo = cols >= x_local
+            # halo indices must be in range of this device's need array
+            assert cols[halo].max(initial=0) - x_local < need.size + 1
+            for i in range(rhi - rlo):
+                for c, v in zip(cols[i], vals[i]):
+                    if c < 0:
+                        continue
+                    gcol = clo + c if c < x_local else need[c - x_local]
+                    dense[rlo + i, gcol] += v
+        np.testing.assert_allclose(dense, M.to_dense(), atol=1e-12,
+                                   err_msg=strat)
+
+
+def test_rect_plan_halo_slots_are_offproc(rect_ops):
+    """No device 'needs' x-entries it owns (the paper's no-self-comm rule)."""
+    for M, g, op, strat in rect_ops:
+        for d in range(op.n_devices):
+            clo, chi = op.col_part.local_range(d)
+            need = g.need[d]
+            assert not ((need >= clo) & (need < chi)).any()
+
+
+def test_dist_hierarchy_selection_table():
+    """Every (level, op) row carries a chosen strategy + modeled times."""
+    A = laplace_3d(8)
+    h = setup(A, solver="rs")
+    from repro.amg.dist_solve import DistHierarchy
+    dh = DistHierarchy.build(h, 1, 1, params=BLUE_WATERS)
+    rows = dh.selection_table()
+    ops = {(r["level"], r["op"]) for r in rows}
+    assert (0, "spmv_A") in ops
+    for l in range(len(dh.levels) - 1):
+        assert (l, "interp") in ops and (l, "restrict") in ops
+    for r in rows:
+        assert r["strategy"] in ("standard", "nap2", "nap3")
+        if r["modeled"]:
+            assert r["modeled"][r["strategy"]] == min(r["modeled"].values())
+    assert "dist hierarchy" in dh.summary()
+
+
+def test_backend_dispatch_single_device():
+    """backend="dist" on a 1x1 mesh matches the host solver bit-for-fp32."""
+    A = laplace_3d(8)
+    h = setup(A, solver="rs")
+    b = A.matvec(np.ones(A.nrows))
+    from repro.amg.dist_solve import DistHierarchy
+    dh = DistHierarchy.build(h, 1, 1, strategy="standard")
+    res_h = pcg(h, b, tol=1e-5, maxiter=12)
+    res_d = pcg(h, b, tol=1e-5, maxiter=12, backend="dist", dist=dh)
+    assert res_d.converged
+    n = min(len(res_h.residuals), len(res_d.residuals))
+    r0 = res_h.residuals[0]
+    for a, c in zip(res_h.residuals[:n], res_d.residuals[:n]):
+        assert abs(a - c) / r0 < 2e-4
+    with pytest.raises(ValueError):
+        solve(h, b, backend="bogus")
+    with pytest.raises(ValueError):
+        pcg(h, b, backend="bogus")
+    with pytest.raises(ValueError):
+        solve(h, b, backend="dist")            # dist= is required
+    with pytest.raises(ValueError):
+        pcg(h, b, backend="dist", dist={"n_pods": 1})  # lanes missing
+
+
+@pytest.mark.slow
+def test_benchmark_smoke_mode(tmp_path):
+    """benchmarks/dist_solve.py --smoke runs in seconds and emits both the
+    CSV rows and the BENCH_dist_solve.json record file."""
+    env = dict(os.environ)
+    root = pathlib.Path(__file__).parents[1]
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    out_json = tmp_path / "BENCH_dist_solve.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.dist_solve", "--smoke",
+         "--out", str(out_json)],
+        capture_output=True, text=True, env=env, cwd=root, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    for strat in ("standard", "nap2", "nap3", "auto"):
+        assert f"dist_solve_{strat}," in out.stdout
+    import json
+    data = json.loads(out_json.read_text())
+    assert data["benchmark"] == "dist_solve"
+    assert any(r["name"].startswith("dist_solve_auto_L") for r in data["rows"])
+
+
+@pytest.mark.slow
+def test_multidevice_dist_solve_subprocess():
+    env = dict(os.environ)
+    root = str(pathlib.Path(__file__).parents[1] / "src")
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(SCRIPT)], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    for marker in EXPECTED:
+        assert marker in out.stdout, f"missing {marker!r} in:\n{out.stdout}"
