@@ -1,6 +1,9 @@
 """Solve-phase benchmark: the device-resident fused V-cycle, standard vs
 NAP-2 vs NAP-3 vs model-selected per-level strategies (paper Figs. 16/17's
-solve-phase claim, executed rather than simulated).
+solve-phase claim, executed rather than simulated), plus a weak-scaling
+sweep over ≥3 problem sizes (``weak_rows``) and a cached-vs-cold
+``AMGSolver`` session comparison (``session_rows``) showing the per-call
+rebuild cost the session API eliminates.
 
 Emits the ``name,us_per_call,derived`` rows used by :mod:`benchmarks.run`,
 and — when run standalone — a ``BENCH_dist_solve.json`` file with the same
@@ -70,6 +73,74 @@ def rows(smoke: bool | None = None, cycles: int | None = None):
     return out
 
 
+def weak_rows(smoke: bool | None = None, cycles: int | None = None):
+    """Weak-scaling sweep: ≥3 problem sizes through the model-selected
+    fused cycle on the same mesh — µs/cycle as DOFs/device grows."""
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+    import numpy as np
+
+    from repro.amg import setup, solve
+    from repro.amg.dist_solve import DistHierarchy
+    from repro.amg.problems import laplace_3d
+    from repro.core import BLUE_WATERS
+
+    sizes = (6, 8, 10) if smoke else (8, 12, 16)
+    cycles = cycles or (3 if smoke else 10)
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    n_dev = n_pods * lanes
+    out = []
+    for n in sizes:
+        A = laplace_3d(n)
+        h = setup(A, solver="rs")
+        b = A.matvec(np.ones(A.nrows))
+        dh = DistHierarchy.build(h, n_pods, lanes, params=BLUE_WATERS)
+        solve(h, b, maxiter=1, tol=0.0, backend="dist", dist=dh)  # compile
+        t0 = time.perf_counter()
+        res = solve(h, b, maxiter=cycles, tol=0.0, backend="dist", dist=dh)
+        dt = time.perf_counter() - t0
+        out.append((f"dist_weak_n{A.nrows}", dt / cycles * 1e6,
+                    f"mesh={n_pods}x{lanes};dofs_per_dev={A.nrows // n_dev};"
+                    f"levels={h.n_levels};conv={res.avg_conv_factor:.3f}"))
+    return out
+
+
+def session_rows(smoke: bool | None = None):
+    """Cached vs cold AMGSolver sessions: the cold row pays setup +
+    DistHierarchy lowering + program compilation; the cached row shows the
+    per-call rebuild cost the session API eliminates."""
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+    import numpy as np
+
+    from repro.amg.api import AMGConfig, AMGSolver, clear_sessions
+    from repro.amg.problems import laplace_3d
+
+    n = 8 if smoke else 12
+    cycles = 3 if smoke else 10
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    A = laplace_3d(n)
+    b = A.matvec(np.ones(A.nrows))
+    cfg = AMGConfig(backend="dist", n_pods=n_pods, lanes=lanes,
+                    machine="blue_waters", tol=0.0, maxiter=cycles)
+    clear_sessions()
+    t0 = time.perf_counter()
+    bound = AMGSolver(cfg).setup(A)       # hierarchy + lowering
+    bound.solve(b)                        # + compile + solve
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bound2 = AMGSolver(cfg).setup(A)      # session-cache hit
+    bound2.solve(b)                       # reuses compiled programs
+    cached = time.perf_counter() - t0
+    assert bound2 is bound, "session cache must return the same bound solver"
+    derived = f"n={A.nrows};mesh={n_pods}x{lanes};cycles={cycles}"
+    return [("amg_solver_cold", cold * 1e6, derived),
+            ("amg_solver_cached", cached * 1e6,
+             derived + f";speedup={cold / max(cached, 1e-12):.1f}x")]
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -79,7 +150,8 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
-    data = rows(smoke=args.smoke)
+    data = (rows(smoke=args.smoke) + weak_rows(smoke=args.smoke)
+            + session_rows(smoke=args.smoke))
     print("name,us_per_call,derived")
     for name, us, derived in data:
         print(f"{name},{us:.2f},{derived}")

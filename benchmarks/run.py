@@ -18,6 +18,8 @@ MODULES = [
                                             weak=True)),
     ("fig21", lambda: ptap_sweeps.rows()),
     ("dist_solve", lambda: dist_solve.rows(smoke=True)),
+    ("dist_solve_weak", lambda: dist_solve.weak_rows(smoke=True)),
+    ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
     ("roofline", lambda: lm_roofline.rows()),
 ]
 

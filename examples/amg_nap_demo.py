@@ -5,11 +5,12 @@ systems, execute standard/NAP-2/NAP-3 schedules in the rank simulator, and
 print measured message/byte reductions + modeled speedups (Figures 14-17 in
 miniature).
 
-Part 2 (device, 8-way host mesh): lower a hierarchy onto a 2x4 (pod x lane)
-mesh with **per-level model-selected strategies** and run the fused
-``backend="dist"`` PCG solve — the whole V-cycle device-resident in one
-jitted shard_map program — checking its residual history against the host
-backend.
+Part 2 (device, 8-way host mesh): an ``AMGSolver`` session with
+``backend="dist"`` lowers a hierarchy onto a 2x4 (pod x lane) mesh with
+**per-level model-selected strategies** and runs the fused PCG solve — the
+whole V-cycle device-resident in one jitted shard_map program — checking
+its residual history against the host backend, then reuses the same cached
+session for a batched multi-RHS solve.
 
     PYTHONPATH=src python examples/amg_nap_demo.py
 """
@@ -54,20 +55,25 @@ def simulator_study():
 
 
 def dist_solve_demo(n_pods: int = 2, lanes: int = 4):
-    from repro.amg.dist_solve import DistHierarchy
+    from repro.amg import AMGConfig, AMGSolver
 
     A = laplace_3d(12)
-    h = setup(A, solver="rs")
     b = A.matvec(np.ones(A.nrows))
     print(f"\n=== device-resident dist solve: {A.nrows} dofs on a "
           f"{n_pods}x{lanes} host mesh ===")
-    dh = DistHierarchy.build(h, n_pods, lanes, params=BLUE_WATERS)
+    # one session object from setup to serving: the DistHierarchy (comm
+    # graphs, model-selected strategies, halo plans) and its compiled fused
+    # programs are built on first use and reused by every later call
+    cfg = AMGConfig(backend="dist", n_pods=n_pods, lanes=lanes,
+                    machine="blue_waters")
+    bound = AMGSolver(cfg).setup(A)
+    h, dh = bound.hierarchy, bound.dist_hierarchy
     print(dh.summary())
     non_std = {r["strategy"] for r in dh.selection_table()} - {"standard"}
     print(f"non-standard strategies selected: {sorted(non_std) or 'NONE'}")
 
     res_h = pcg(h, b, tol=1e-6, maxiter=40)
-    res_d = pcg(h, b, tol=1e-6, maxiter=40, backend="dist", dist=dh)
+    res_d = bound.pcg(b, tol=1e-6, maxiter=40)
     n = min(len(res_h.residuals), len(res_d.residuals))
     r0 = res_h.residuals[0]
     print(f"{'it':>3} {'host ||r||':>12} {'dist ||r||':>12}")
@@ -80,6 +86,18 @@ def dist_solve_demo(n_pods: int = 2, lanes: int = 4):
     assert non_std, "expected at least one model-selected non-standard level"
     assert diff < 1e-4, f"residual history mismatch: {diff}"
     print("dist == host to 1e-4 relative: OK")
+
+    # same cached session, batched multi-RHS: k systems, ONE device trace
+    assert AMGSolver(cfg).setup(A) is bound          # session-cache hit
+    rng = np.random.default_rng(0)
+    B = np.stack([b, rng.standard_normal(A.nrows),
+                  rng.standard_normal(A.nrows)], axis=1)
+    mres = bound.pcg(B, tol=1e-6, maxiter=40)
+    rel = [np.linalg.norm(B[:, j] - A.matvec(mres.x[:, j]))
+           / np.linalg.norm(B[:, j]) for j in range(B.shape[1])]
+    print(f"multi-RHS [{A.nrows}, {B.shape[1]}] dist PCG: "
+          f"converged={mres.converged}, max rel residual {max(rel):.2e}")
+    assert mres.converged and max(rel) < 1e-5
 
 
 def main():

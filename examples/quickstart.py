@@ -1,5 +1,5 @@
-"""Quickstart: solve a 3D Laplacian with AMG and see the paper's node-aware
-communication selection per level.
+"""Quickstart: the AMGSolver session API on a 3D Laplacian, plus the paper's
+node-aware communication selection per level.
 
     PYTHONPATH=src python examples/quickstart.py [--n 20] [--solver rs]
 """
@@ -10,7 +10,7 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.amg import setup, solve
+from repro.amg import AMGConfig, AMGSolver
 from repro.amg.dist import analyze_hierarchy
 from repro.amg.problems import laplace_3d
 from repro.core import BLUE_WATERS, Topology
@@ -26,17 +26,32 @@ def main():
 
     A = laplace_3d(args.n)
     print(f"A: {A.nrows} dofs, {A.nnz} nnz")
-    h = setup(A, solver=args.solver)
-    print(h.summary())
+
+    # one configurable, cacheable session object: setup once, solve many
+    cfg = AMGConfig(solver=args.solver)
+    bound = AMGSolver(cfg).setup(A)
+    print(bound.hierarchy.summary())
 
     b = A.matvec(np.ones(A.nrows))
-    res = solve(h, b, tol=1e-8)
+    res = bound.solve(b)
     print(f"solve: {res.iterations} iters, conv factor "
           f"{res.avg_conv_factor:.3f}, ||x-1||∞ = "
           f"{np.abs(res.x - 1).max():.2e}")
 
+    # the session cache: same matrix + same config → the same solver object,
+    # no re-setup
+    again = AMGSolver(cfg).setup(A)
+    print(f"second setup() is a cache hit: {again is bound}")
+
+    # multi-RHS: [n, k] solves k systems through one session
+    rng = np.random.default_rng(0)
+    B = np.stack([b, rng.standard_normal(A.nrows)], axis=1)
+    mres = bound.solve(B)
+    print(f"multi-RHS [{A.nrows}, 2] solve: converged={mres.converged}, "
+          f"iters per column = {[c.iterations for c in mres.columns]}")
+
     topo = Topology(n_nodes=args.nodes, ppn=args.ppn)
-    ops = analyze_hierarchy(h, topo, BLUE_WATERS)
+    ops = analyze_hierarchy(bound.hierarchy, topo, BLUE_WATERS)
     print(f"\nnode-aware strategy selection ({topo.n_procs} ranks, "
           f"{args.nodes} nodes — paper §4):")
     print(f"{'lvl':>3} {'op':>12} {'chosen':>9} {'std(µs)':>9} "

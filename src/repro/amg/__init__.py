@@ -1,22 +1,43 @@
-"""Algebraic multigrid substrate (setup + solve).
+"""Algebraic multigrid substrate (setup + solve + serving sessions).
 
-Host side (pure numpy): CSR kernels, setup (Algorithm 1), the reference
-V-cycle / stationary / PCG solvers (Algorithm 2), and the distributed
-communication analysis of :mod:`repro.amg.dist`.
+The front door is the **session API** of :mod:`repro.amg.api`::
 
-Device side: :class:`~repro.amg.dist_solve.DistHierarchy` lowers a hierarchy
-onto a (pods × lanes) mesh — per level, each of {A, P, R} gets its own
-communication graph, a strategy (standard/NAP-2/NAP-3) chosen from the
-paper's performance models, and a halo plan — and ``solve``/``pcg`` with
-``backend="dist"`` run the whole V-cycle as one jitted shard_map program.
-``DistHierarchy`` is exported lazily so numpy-only users never import JAX.
+    from repro.amg import AMGConfig, AMGSolver
+
+    cfg = AMGConfig(solver="rs", backend="dist", n_pods=2, lanes=4)
+    bound = AMGSolver(cfg).setup(A)     # hierarchy + lowering, cached
+    res = bound.solve(b)                # b: [n] or [n, k] multi-RHS
+    res = bound.pcg(b, x0=x_warm)
+
+``AMGConfig`` is frozen and hashable; ``AMGSolver(config).setup(A)`` returns
+a ``BoundSolver`` cached per (matrix fingerprint, config), so the expensive
+node-aware setup — the host ``Hierarchy``, the lowered ``DistHierarchy``
+(per-level {A, P, R} comm graphs + standard/NAP-2/NAP-3 strategy selection
+from the paper's performance models + halo plans), and its compiled fused
+V-cycle/PCG shard_map programs — is built once and reused across solves.
+Backends plug in through :func:`~repro.amg.api.register_backend`
+(``"host"`` = reference numpy, ``"dist"`` = device-resident fused V-cycle);
+:class:`~repro.amg.api.SolverEngine` serves batched ``(matrix_id, b)``
+request streams on top of the same cache.
+
+The classic free functions remain as thin wrappers over that API:
+``setup(A)`` builds a host ``Hierarchy`` (Algorithm 1), and
+``solve``/``pcg``/``vcycle`` accept ``backend="host"|"dist"`` plus the
+legacy ``dist=`` argument (a prebuilt ``DistHierarchy`` or a build-kwargs
+dict, now cached per hierarchy).  ``DistHierarchy`` is exported lazily so
+numpy-only users never import JAX.
 """
+from .api import (AMGConfig, AMGSolver, BoundSolver, SolveRequest,
+                  SolverEngine, available_backends, register_backend)
 from .csr import CSR
 from .hierarchy import Hierarchy, Level, setup
-from .solve import SolveOptions, SolveResult, pcg, solve, vcycle
+from .solve import (MultiSolveResult, SolveOptions, SolveResult, pcg, solve,
+                    vcycle)
 
 __all__ = ["CSR", "Hierarchy", "Level", "setup", "SolveOptions", "SolveResult",
-           "pcg", "solve", "vcycle", "DistHierarchy"]
+           "MultiSolveResult", "pcg", "solve", "vcycle", "AMGConfig",
+           "AMGSolver", "BoundSolver", "SolverEngine", "SolveRequest",
+           "available_backends", "register_backend", "DistHierarchy"]
 
 
 def __getattr__(name):

@@ -1,0 +1,502 @@
+"""Session API: one configurable, cacheable, multi-RHS solver object.
+
+The expensive parts of a node-aware AMG solve — the host ``Hierarchy``
+(setup phase), the lowered :class:`~repro.amg.dist_solve.DistHierarchy`
+(comm graphs, per-level strategy selection, halo plans) and its compiled
+shard_map programs — are built **once** per (matrix fingerprint, config)
+and reused across any number of solves, the way a parallel AMG code builds
+its MPI communicators once and amortizes them (Bienz et al.'s
+communicator-reuse argument for node-aware SpMV).
+
+Surface::
+
+    cfg = AMGConfig(solver="rs", backend="dist", n_pods=2, lanes=4)
+    bound = AMGSolver(cfg).setup(A)      # cached per (matrix, config)
+    res = bound.solve(b)                 # b: [n] or [n, k] (multi-RHS)
+    res = bound.pcg(b, x0=x_warm)
+    x = bound.vcycle(b)                  # one preconditioner application
+
+Backends register through :func:`register_backend`; ``"host"`` (numpy
+reference) and ``"dist"`` (device-resident fused V-cycle) ship here, and
+future backends (device-resident setup, W/F-cycles) plug in without
+touching call sites.  :class:`SolverEngine` drains ``(matrix_id, b)``
+requests against the session cache, batching same-matrix right-hand sides
+through one multi-RHS device trace — the serving entrypoint behind
+``repro.launch.serve --solver amg``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+from .csr import CSR
+from .hierarchy import Hierarchy, setup as _hierarchy_setup
+from .solve import (MultiSolveResult, SolveOptions, SolveResult, host_pcg,
+                    host_solve, host_vcycle)
+
+__all__ = [
+    "AMGConfig", "AMGSolver", "BoundSolver", "SolverEngine", "SolveRequest",
+    "available_backends", "bind_hierarchy", "clear_sessions",
+    "matrix_fingerprint", "register_backend", "session_count",
+]
+
+_DTYPES = ("float32", "float64", "bfloat16")
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AMGConfig:
+    """Frozen, hashable description of a full solver session: setup knobs,
+    smoother options, iteration defaults, and backend/mesh/strategy/kernel
+    knobs.  Hashability is what makes it a cache key — two configs that
+    compare equal always produce interchangeable solvers."""
+
+    # -- setup phase (Algorithm 1)
+    solver: str = "rs"                   # "rs" | "sa"
+    theta: float = 0.25
+    max_coarse: int = 100
+    max_levels: int = 25
+    aggressive: bool = False
+    prolongation_sweeps: int = 1
+    seed: int = 42
+    # -- solve phase (Algorithm 2)
+    opts: SolveOptions = dataclasses.field(default_factory=SolveOptions)
+    tol: float = 1e-8
+    maxiter: int = 100
+    pcg_maxiter: int = 200
+    # -- backend + mesh + strategy + kernel knobs
+    backend: str = "host"                # registry name: "host" | "dist" | …
+    n_pods: int = 1
+    lanes: int = 1
+    strategy: str = "auto"               # "auto" | "standard" | "nap2" | "nap3"
+    machine: str = "tpu_v5e"             # repro.core.MACHINES name
+    dtype: str = "float32"
+    use_kernel: bool | None = None       # None = auto (Pallas ELL on TPU)
+    interpret: bool | None = None        # None = auto (interpret off-TPU)
+    reduce_strategy: str = "nap3"        # norms/dots: "nap3" | "flat"
+
+    def __post_init__(self):
+        if self.dtype not in _DTYPES:
+            raise ValueError(f"dtype must be one of {_DTYPES}, "
+                             f"got {self.dtype!r}")
+        from ..core import MACHINES
+        if self.machine not in MACHINES:
+            raise ValueError(f"unknown machine {self.machine!r}; "
+                             f"known: {sorted(MACHINES)}")
+
+    def replace(self, **changes) -> "AMGConfig":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------ round-trip
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)       # recurses into opts
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AMGConfig":
+        d = dict(d)
+        opts = d.pop("opts", None)
+        if isinstance(opts, dict):
+            opts = SolveOptions(**opts)
+        return cls(opts=opts or SolveOptions(), **d)
+
+    # ------------------------------------------------------- derived kwargs
+    def setup_kwargs(self) -> dict:
+        return dict(solver=self.solver, theta=self.theta,
+                    max_coarse=self.max_coarse, max_levels=self.max_levels,
+                    aggressive=self.aggressive,
+                    prolongation_sweeps=self.prolongation_sweeps,
+                    seed=self.seed)
+
+    def dist_build_kwargs(self) -> dict:
+        """Kwargs for ``DistHierarchy.build`` (resolves machine + dtype)."""
+        import jax.numpy as jnp
+
+        from ..core import MACHINES
+        dtype = {"float32": jnp.float32, "float64": jnp.float64,
+                 "bfloat16": jnp.bfloat16}[self.dtype]
+        return dict(n_pods=self.n_pods, lanes=self.lanes,
+                    params=MACHINES[self.machine], strategy=self.strategy,
+                    dtype=dtype, use_kernel=self.use_kernel,
+                    interpret=self.interpret,
+                    reduce_strategy=self.reduce_strategy)
+
+
+def matrix_fingerprint(A: CSR) -> str:
+    """Content hash of a CSR matrix — the matrix half of the session key."""
+    h = hashlib.sha1()
+    h.update(np.asarray(A.shape, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(A.indptr).tobytes())
+    h.update(np.ascontiguousarray(A.indices).tobytes())
+    h.update(np.ascontiguousarray(A.data).tobytes())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# Backend registry
+# --------------------------------------------------------------------------
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make a :class:`BoundSolver` subclass reachable as
+    ``AMGConfig(backend=name)`` / ``solve(..., backend=name)``."""
+    def deco(cls):
+        cls.backend_name = name
+        _BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def backend_class(name: str) -> type:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered backends: "
+                         f"{available_backends()}") from None
+
+
+def bind_hierarchy(h: Hierarchy, backend: str = "host", dist=None,
+                   opts: SolveOptions | None = None) -> "BoundSolver":
+    """Wrap an existing host hierarchy in the named backend's bound solver.
+
+    This is what the free functions ``solve`` / ``pcg`` / ``vcycle`` call;
+    ``dist=`` carries the legacy prebuilt-``DistHierarchy``-or-kwargs-dict
+    argument (dict kwargs hit the per-hierarchy cache).
+    """
+    return backend_class(backend).from_hierarchy(h, dist=dist, opts=opts)
+
+
+# --------------------------------------------------------------------------
+# Bound solvers
+# --------------------------------------------------------------------------
+
+
+class BoundSolver:
+    """A hierarchy bound to one backend: the object that owns all caching.
+
+    Created by :meth:`AMGSolver.setup` (full session: matrix → hierarchy →
+    backend lowering) or :func:`bind_hierarchy` (wrap an existing
+    hierarchy).  ``solve``/``pcg`` accept ``b`` of shape ``[n]`` or
+    ``[n, k]``; the multi-RHS form returns a
+    :class:`~repro.amg.solve.MultiSolveResult`.
+    """
+
+    backend_name = "?"
+
+    def __init__(self, config: AMGConfig, hierarchy: Hierarchy):
+        self.config = config
+        self.hierarchy = hierarchy
+
+    @classmethod
+    def from_hierarchy(cls, h: Hierarchy, dist=None,
+                       opts: SolveOptions | None = None) -> "BoundSolver":
+        return cls(AMGConfig(backend=cls.backend_name,
+                             opts=opts or SolveOptions()), h)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def A(self) -> CSR:
+        return self.hierarchy.levels[0].A
+
+    @property
+    def n(self) -> int:
+        return self.A.nrows
+
+    @property
+    def opts(self) -> SolveOptions:
+        return self.config.opts
+
+    def _check_b(self, b) -> np.ndarray:
+        b = np.asarray(b, dtype=np.float64)
+        if b.ndim not in (1, 2) or b.shape[0] != self.n:
+            raise ValueError(f"b must be [{self.n}] or [{self.n}, k], "
+                             f"got shape {b.shape}")
+        return b
+
+    # -------------------------------------------------------------- methods
+    def solve(self, b, *, tol: float | None = None,
+              maxiter: int | None = None, x0=None):
+        raise NotImplementedError
+
+    def pcg(self, b, *, tol: float | None = None,
+            maxiter: int | None = None, x0=None):
+        raise NotImplementedError
+
+    def vcycle(self, b, x0=None):
+        raise NotImplementedError
+
+
+@register_backend("host")
+class HostBoundSolver(BoundSolver):
+    """Reference numpy backend; multi-RHS runs k independent column solves."""
+
+    def _per_column(self, fn, b, x0):
+        cols, xs = [], []
+        for j in range(b.shape[1]):
+            r = fn(b[:, j], None if x0 is None else x0[:, j])
+            cols.append(r)
+            xs.append(r.x)
+        return MultiSolveResult(np.stack(xs, axis=1), cols)
+
+    def solve(self, b, *, tol=None, maxiter=None, x0=None):
+        b = self._check_b(b)
+        tol = self.config.tol if tol is None else tol
+        maxiter = self.config.maxiter if maxiter is None else maxiter
+        run = lambda bc, xc: host_solve(self.hierarchy, bc, tol=tol,
+                                        maxiter=maxiter, opts=self.opts,
+                                        x0=xc)
+        if b.ndim == 2:
+            return self._per_column(run, b, x0)
+        return run(b, x0)
+
+    def pcg(self, b, *, tol=None, maxiter=None, x0=None):
+        b = self._check_b(b)
+        tol = self.config.tol if tol is None else tol
+        maxiter = self.config.pcg_maxiter if maxiter is None else maxiter
+        run = lambda bc, xc: host_pcg(self.hierarchy, bc, tol=tol,
+                                      maxiter=maxiter, opts=self.opts, x0=xc)
+        if b.ndim == 2:
+            return self._per_column(run, b, x0)
+        return run(b, x0)
+
+    def vcycle(self, b, x0=None):
+        b = self._check_b(b)
+        if b.ndim == 2:
+            x0c = (lambda j: None) if x0 is None else (lambda j: x0[:, j])
+            return np.stack([host_vcycle(self.hierarchy, b[:, j], x0c(j),
+                                         self.opts)
+                             for j in range(b.shape[1])], axis=1)
+        return host_vcycle(self.hierarchy, b, x0, self.opts)
+
+
+@register_backend("dist")
+class DistBoundSolver(BoundSolver):
+    """Device-resident backend: lazily lowers the hierarchy onto the mesh
+    ONCE and reuses the ``DistHierarchy`` (and its compiled programs, cached
+    inside it per option set) for every subsequent call."""
+
+    def __init__(self, config: AMGConfig, hierarchy: Hierarchy):
+        super().__init__(config, hierarchy)
+        self._dist = None
+
+    @classmethod
+    def from_hierarchy(cls, h, dist=None, opts=None):
+        from .dist_solve import _ensure_dist
+        self = cls(AMGConfig(backend=cls.backend_name,
+                             opts=opts or SolveOptions()), h)
+        self._dist = _ensure_dist(h, dist)     # raises when dist is missing
+        return self
+
+    @property
+    def dist_hierarchy(self):
+        """The lowered hierarchy; built on first access, then reused.
+
+        The build goes through the per-hierarchy ``dist_cache``, so bound
+        solvers that share a hierarchy (configs differing only in iteration
+        defaults, say) also share one lowering.
+        """
+        if self._dist is None:
+            from .dist_solve import _ensure_dist
+            self._dist = _ensure_dist(self.hierarchy,
+                                      self.config.dist_build_kwargs())
+        return self._dist
+
+    def solve(self, b, *, tol=None, maxiter=None, x0=None):
+        from .dist_solve import dist_solve
+        b = self._check_b(b)
+        tol = self.config.tol if tol is None else tol
+        maxiter = self.config.maxiter if maxiter is None else maxiter
+        return dist_solve(self.dist_hierarchy, b, tol=tol, maxiter=maxiter,
+                          opts=self.opts, x0=x0)
+
+    def pcg(self, b, *, tol=None, maxiter=None, x0=None):
+        from .dist_solve import dist_pcg
+        b = self._check_b(b)
+        tol = self.config.tol if tol is None else tol
+        maxiter = self.config.pcg_maxiter if maxiter is None else maxiter
+        return dist_pcg(self.dist_hierarchy, b, tol=tol, maxiter=maxiter,
+                        opts=self.opts, x0=x0)
+
+    def vcycle(self, b, x0=None):
+        from .dist_solve import dist_vcycle
+        if x0 is not None:
+            raise ValueError("dist vcycle starts from x=0; x0= is not "
+                             "supported on the dist backend")
+        return dist_vcycle(self.dist_hierarchy, self._check_b(b), self.opts)
+
+
+# --------------------------------------------------------------------------
+# The session object + cache
+# --------------------------------------------------------------------------
+
+SESSION_CACHE_SIZE = 16
+_SESSIONS: "OrderedDict[tuple[str, AMGConfig], BoundSolver]" = OrderedDict()
+# hierarchies keyed by (matrix fingerprint, setup kwargs) only, so configs
+# that differ in solve/backend knobs share one setup (and, through the
+# hierarchy's dist_cache, one lowering)
+_SETUPS: "OrderedDict[tuple, Hierarchy]" = OrderedDict()
+
+
+def clear_sessions() -> None:
+    _SESSIONS.clear()
+    _SETUPS.clear()
+
+
+def session_count() -> int:
+    return len(_SESSIONS)
+
+
+class AMGSolver:
+    """The session entrypoint: ``AMGSolver(config).setup(A)`` returns a
+    :class:`BoundSolver` cached per (matrix fingerprint, config) — repeated
+    setup of the same matrix under the same config is free, and every solve
+    through the bound object reuses the lowered hierarchy and its compiled
+    programs.  Configs that differ only in knobs irrelevant to the setup
+    phase (tol/maxiter, backend, mesh, …) get distinct bound solvers that
+    share ONE host hierarchy."""
+
+    def __init__(self, config: AMGConfig | None = None, **overrides):
+        if config is None:
+            config = AMGConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        backend_class(config.backend)        # fail fast on unknown backend
+        self.config = config
+
+    def setup(self, A: CSR) -> BoundSolver:
+        fp = matrix_fingerprint(A)
+        key = (fp, self.config)
+        bound = _SESSIONS.get(key)
+        if bound is not None:
+            _SESSIONS.move_to_end(key)
+            return bound
+        skw = self.config.setup_kwargs()
+        skey = (fp, tuple(sorted(skw.items())))
+        h = _SETUPS.get(skey)
+        if h is None:
+            h = _hierarchy_setup(A, **skw)
+            _SETUPS[skey] = h
+            while len(_SETUPS) > SESSION_CACHE_SIZE:
+                _SETUPS.popitem(last=False)
+        else:
+            _SETUPS.move_to_end(skey)
+        bound = backend_class(self.config.backend)(self.config, h)
+        _SESSIONS[key] = bound
+        while len(_SESSIONS) > SESSION_CACHE_SIZE:
+            _SESSIONS.popitem(last=False)
+        return bound
+
+
+# --------------------------------------------------------------------------
+# Serving: drain (matrix_id, b) requests against the session cache
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    rid: int
+    matrix_id: str
+    b: np.ndarray
+    method: str = "solve"        # "solve" | "pcg"
+
+
+class SolverEngine:
+    """Request-draining solver service (the serving story's first step).
+
+    Matrices are registered once under an id; submitted requests are grouped
+    by (matrix_id, method) and same-matrix right-hand sides are stacked into
+    ``[n, k]`` batches (up to ``max_rhs``) so one multi-RHS V-cycle trace
+    serves the whole group.  The underlying :class:`AMGSolver` session cache
+    means the hierarchy — and on the dist backend the lowered
+    ``DistHierarchy`` + compiled programs — is built once per matrix.
+    """
+
+    def __init__(self, config: AMGConfig | None = None, max_rhs: int = 8):
+        self.solver = AMGSolver(config or AMGConfig())
+        self.max_rhs = max(1, int(max_rhs))
+        self._matrices: dict[str, CSR] = {}
+        self._bound: dict[str, BoundSolver] = {}
+        self._queue: list[SolveRequest] = []
+        self.stats = {"requests": 0, "batches": 0, "batched_rhs": 0,
+                      "setups": 0, "unconverged": 0}
+        # per-request {"converged", "iterations"} from the latest run()
+        self.diagnostics: dict[int, dict] = {}
+
+    def add_matrix(self, matrix_id: str, A: CSR) -> None:
+        self._matrices[matrix_id] = A
+
+    def bound_for(self, matrix_id: str) -> BoundSolver:
+        bound = self._bound.get(matrix_id)
+        if bound is None:
+            try:
+                A = self._matrices[matrix_id]
+            except KeyError:
+                raise KeyError(f"unknown matrix_id {matrix_id!r}; "
+                               f"registered: {sorted(self._matrices)}") \
+                    from None
+            bound = self.solver.setup(A)
+            self._bound[matrix_id] = bound
+            self.stats["setups"] += 1
+        return bound
+
+    def submit(self, req: SolveRequest) -> None:
+        if req.matrix_id not in self._matrices:
+            raise KeyError(f"unknown matrix_id {req.matrix_id!r}; "
+                           f"registered: {sorted(self._matrices)}")
+        if req.method not in ("solve", "pcg"):
+            raise ValueError(f"unknown method {req.method!r}")
+        b = np.asarray(req.b, dtype=np.float64)
+        n = self._matrices[req.matrix_id].nrows
+        if b.shape != (n,):
+            raise ValueError(f"request {req.rid}: b must be [{n}], "
+                             f"got {b.shape}")
+        self._queue.append(req)
+        self.stats["requests"] += 1
+
+    def _record(self, rid: int, result) -> None:
+        self.diagnostics[rid] = {"converged": result.converged,
+                                 "iterations": result.iterations}
+        if not result.converged:
+            self.stats["unconverged"] += 1
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: x}.  Per-request convergence
+        status lands in :attr:`diagnostics` (and ``stats["unconverged"]``)
+        — an x returned for an unconverged solve is best-effort."""
+        out: dict[int, np.ndarray] = {}
+        self.diagnostics = {}
+        groups: dict[tuple[str, str], list[SolveRequest]] = {}
+        for req in self._queue:
+            groups.setdefault((req.matrix_id, req.method), []).append(req)
+        self._queue.clear()
+        for (mid, method), reqs in groups.items():
+            bound = self.bound_for(mid)
+            fn = bound.solve if method == "solve" else bound.pcg
+            for i in range(0, len(reqs), self.max_rhs):
+                chunk = reqs[i: i + self.max_rhs]
+                if len(chunk) == 1:
+                    res = fn(chunk[0].b)
+                    out[chunk[0].rid] = np.asarray(res.x)
+                    self._record(chunk[0].rid, res)
+                else:
+                    B = np.stack([r.b for r in chunk], axis=1)
+                    res = fn(B)
+                    for j, r in enumerate(chunk):
+                        out[r.rid] = np.asarray(res.x[:, j])
+                        self._record(r.rid, res.columns[j])
+                    self.stats["batched_rhs"] += len(chunk)
+                self.stats["batches"] += 1
+        return out

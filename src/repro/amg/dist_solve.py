@@ -231,6 +231,13 @@ class DistHierarchy:
     def _pnorm(self, r):
         return jnp.sqrt(self._pdot(r, r))
 
+    def _pdot_cols(self, a, b):
+        """Per-column dot for [local, k] operands → replicated [k]."""
+        part = jnp.sum(a * b, axis=0)
+        if self.reduce_strategy == "flat":
+            return jax.lax.psum(part, DEV_AXES)
+        return hier_psum(part, *DEV_AXES, strategy=self.reduce_strategy)
+
     def _relax(self, dl: DistLevel, arrs: dict, x, b, opts, sweeps: int):
         if sweeps == 0:
             return x
@@ -266,7 +273,13 @@ class DistHierarchy:
 
     # ------------------------------------------------------------- programs
     def programs(self, opts) -> dict:
-        """Jitted shard_map programs for one option set (cached)."""
+        """Jitted shard_map programs for one option set (cached).
+
+        Single-RHS programs take [local] vectors; the ``*_m`` variants take
+        [local, k] multi-RHS blocks — the V-cycle is vmapped over the RHS
+        axis inside the shard_map body, so k systems share ONE device trace
+        per program (norms/dots come back as replicated [k] vectors).
+        """
         key = (opts.smoother, opts.presweeps, opts.postsweeps, opts.omega,
                opts.cheby_degree)
         if key in self._programs:
@@ -282,33 +295,70 @@ class DistHierarchy:
             return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs,
                                      out_specs=out_specs, check_vma=False))
 
+        def spmv0(arrs, x):
+            return self._spmv(self.levels[0].A, arrs[0]["A"], x)
+
+        def spmv0_m(arrs, x):                       # [local, k] → [local, k]
+            return jax.vmap(lambda v: spmv0(arrs, v), in_axes=1,
+                            out_axes=1)(x)
+
+        def vcycle_m(arrs, b, x):                   # batched V-cycle
+            if x is None:
+                return jax.vmap(
+                    lambda bc: self._vcycle_dev(arrs, bc, None, opts),
+                    in_axes=1, out_axes=1)(b)
+            return jax.vmap(
+                lambda bc, xc: self._vcycle_dev(arrs, bc, xc, opts),
+                in_axes=1, out_axes=1)(b, x)
+
         def resid_norm_body(x, b, arrs):
             x, b, arrs = x[0], b[0], squeeze(arrs)
-            r = b - self._spmv(self.levels[0].A, arrs[0]["A"], x)
+            r = b - spmv0(arrs, x)
             return self._pnorm(r)
+
+        def resid_norm_m_body(x, b, arrs):
+            x, b, arrs = x[0], b[0], squeeze(arrs)
+            r = b - spmv0_m(arrs, x)
+            return jnp.sqrt(self._pdot_cols(r, r))
 
         def cycle_body(x, b, arrs):
             x, b, arrs = x[0], b[0], squeeze(arrs)
             x = self._vcycle_dev(arrs, b, x, opts)
-            r = b - self._spmv(self.levels[0].A, arrs[0]["A"], x)
+            r = b - spmv0(arrs, x)
             return x[None], self._pnorm(r)
+
+        def cycle_m_body(x, b, arrs):
+            x, b, arrs = x[0], b[0], squeeze(arrs)
+            x = vcycle_m(arrs, b, x)
+            r = b - spmv0_m(arrs, x)
+            return x[None], jnp.sqrt(self._pdot_cols(r, r))
 
         def vcycle_body(b, arrs):
             b, arrs = b[0], squeeze(arrs)
             return self._vcycle_dev(arrs, b, None, opts)[None]
 
-        def pcg_init_body(b, arrs):
+        def vcycle_m_body(b, arrs):
             b, arrs = b[0], squeeze(arrs)
-            r = b
+            return vcycle_m(arrs, b, None)[None]
+
+        def pcg_init_body(x, b, arrs):
+            x, b, arrs = x[0], b[0], squeeze(arrs)
+            r = b - spmv0(arrs, x)                  # x0 warm start
             z = self._vcycle_dev(arrs, r, None, opts)
             rz = self._pdot(r, z)
             return r[None], z[None], rz, self._pnorm(r)
 
+        def pcg_init_m_body(x, b, arrs):
+            x, b, arrs = x[0], b[0], squeeze(arrs)
+            r = b - spmv0_m(arrs, x)
+            z = vcycle_m(arrs, r, None)
+            rz = self._pdot_cols(r, z)
+            return r[None], z[None], rz, jnp.sqrt(self._pdot_cols(r, r))
+
         def pcg_step_body(x, r, p, rz, arrs):
             x, r, p = x[0], r[0], p[0]
             arrs = squeeze(arrs)
-            a0 = arrs[0]["A"]
-            Ap = self._spmv(self.levels[0].A, a0, p)
+            Ap = spmv0(arrs, p)
             alpha = rz / self._pdot(p, Ap)
             x = x + alpha * p
             r = r - alpha * Ap
@@ -318,13 +368,38 @@ class DistHierarchy:
             p = z + (rz_new / rz) * p
             return x[None], r[None], p[None], rz_new, rnorm
 
+        def pcg_step_m_body(x, r, p, rz, arrs):
+            x, r, p = x[0], r[0], p[0]              # [local, k]; rz [k]
+            arrs = squeeze(arrs)
+            Ap = spmv0_m(arrs, p)
+            # columns that already converged exactly (rz = pAp = 0, e.g. a
+            # zero RHS) must not poison the batch with 0/0 NaNs: guard the
+            # divisions so such columns step by exactly zero
+            den = self._pdot_cols(p, Ap)
+            alpha = rz / jnp.where(den == 0, 1.0, den)  # [k], bcasts on cols
+            x = x + alpha * p
+            r = r - alpha * Ap
+            rnorm = jnp.sqrt(self._pdot_cols(r, r))
+            z = vcycle_m(arrs, r, None)
+            rz_new = self._pdot_cols(r, z)
+            p = z + (rz_new / jnp.where(rz == 0, 1.0, rz)) * p
+            return x[None], r[None], p[None], rz_new, rnorm
+
         progs = {
             "resid_norm": smap(resid_norm_body, (dev, dev, dev), rep),
             "cycle": smap(cycle_body, (dev, dev, dev), (dev, rep)),
             "vcycle": smap(vcycle_body, (dev, dev), dev),
-            "pcg_init": smap(pcg_init_body, (dev, dev), (dev, dev, rep, rep)),
+            "pcg_init": smap(pcg_init_body, (dev, dev, dev),
+                             (dev, dev, rep, rep)),
             "pcg_step": smap(pcg_step_body, (dev, dev, dev, rep, dev),
                              (dev, dev, dev, rep, rep)),
+            "resid_norm_m": smap(resid_norm_m_body, (dev, dev, dev), rep),
+            "cycle_m": smap(cycle_m_body, (dev, dev, dev), (dev, rep)),
+            "vcycle_m": smap(vcycle_m_body, (dev, dev), dev),
+            "pcg_init_m": smap(pcg_init_m_body, (dev, dev, dev),
+                               (dev, dev, rep, rep)),
+            "pcg_step_m": smap(pcg_step_m_body, (dev, dev, dev, rep, dev),
+                               (dev, dev, dev, rep, rep)),
         }
         self._programs[key] = progs
         return progs
@@ -335,7 +410,38 @@ class DistHierarchy:
 # --------------------------------------------------------------------------
 
 
+# defaults of DistHierarchy.build, used to normalize cache keys so kwargs
+# dicts that spell a default explicitly hit the same entry
+_BUILD_DEFAULTS = dict(params=TPU_V5E, strategy="auto",
+                       strategies=SOLVE_STRATEGIES, dtype=jnp.float32,
+                       mesh=None, use_kernel=None, interpret=None,
+                       reduce_strategy="nap3")
+DIST_CACHE_SIZE = 8
+
+
+def _freeze_kwargs(kw: dict) -> tuple | None:
+    """Hashable cache key for a DistHierarchy.build kwargs dict (normalized
+    against the build defaults), or ``None`` when any value is unhashable
+    (an explicit mesh, say) — such calls are not cached rather than risking
+    a stale hit keyed on a recycled id."""
+    items = []
+    for k, v in sorted({**_BUILD_DEFAULTS, **kw}.items()):
+        try:
+            hash(v)
+        except TypeError:
+            return None
+        items.append((k, v))
+    return tuple(items)
+
+
 def _ensure_dist(h, dist, **build_kwargs) -> DistHierarchy:
+    """Resolve the legacy ``dist=`` argument to a DistHierarchy.
+
+    A kwargs dict is resolved through the per-hierarchy ``dist_cache`` so
+    repeated ``solve(..., backend="dist", dist={...})`` calls reuse ONE
+    lowered hierarchy (comm graphs, strategy selection, compiled programs)
+    instead of rebuilding it every call.
+    """
     if isinstance(h, DistHierarchy):
         return h
     if isinstance(dist, DistHierarchy):
@@ -347,30 +453,87 @@ def _ensure_dist(h, dist, **build_kwargs) -> DistHierarchy:
             "with at least n_pods and lanes")
     kw = dict(dist)
     kw.update(build_kwargs)
+    key = _freeze_kwargs(kw)
+    cache = getattr(h, "dist_cache", None)
+    if cache is not None and key is not None and key in cache:
+        return cache[key]
     try:
         n_pods, lanes = kw.pop("n_pods"), kw.pop("lanes")
     except KeyError as e:
         raise ValueError(f"dist= kwargs dict must set {e.args[0]!r}") from None
-    return DistHierarchy.build(h, n_pods, lanes, **kw)
+    dh = DistHierarchy.build(h, n_pods, lanes, **kw)
+    if cache is not None and key is not None:
+        cache[key] = dh
+        while len(cache) > DIST_CACHE_SIZE:      # oldest-first eviction
+            cache.pop(next(iter(cache)))
+    return dh
+
+
+def _norms(b: np.ndarray):
+    """Per-column norms of b as a denominator: [k] for [n, k], scalar else."""
+    nb = np.linalg.norm(b, axis=0)
+    return np.where(nb == 0, 1.0, nb)
 
 
 def dist_vcycle(dh: DistHierarchy, b: np.ndarray, opts=None) -> np.ndarray:
-    """One device-resident V-cycle from a zero initial guess."""
+    """One device-resident V-cycle from a zero initial guess ([n] or [n, k])."""
     from .solve import SolveOptions
     opts = opts or SolveOptions()
+    b = np.asarray(b, dtype=np.float64)
     progs = dh.programs(opts)
     bd = dh.scatter(b)
-    return dh.gather(progs["vcycle"](bd, dh._arrs))
+    prog = progs["vcycle_m" if b.ndim == 2 else "vcycle"]
+    return dh.gather(prog(bd, dh._arrs))
+
+
+def _column_results(dh, x, res, nb, tol):
+    """Slice a batched solve into per-column SolveResults.
+
+    Matches the host backend's per-column semantics: each column reports
+    the iteration count at which IT first converged (the batch may have
+    kept cycling for slower columns) and a residual history truncated
+    there, so ``iterations``/``avg_conv_factor`` agree across backends.
+    """
+    from .solve import MultiSolveResult, SolveResult
+    X = dh.gather(x)
+    k = X.shape[1]
+    cols = []
+    for j in range(k):
+        hist = [float(r[j]) for r in res]
+        nbj = float(nb[j])
+        it = next((i for i, r in enumerate(hist) if r / nbj < tol), None)
+        if it is None:
+            cols.append(SolveResult(X[:, j], hist, len(hist) - 1, False))
+        else:
+            cols.append(SolveResult(X[:, j], hist[: it + 1], it, True))
+    return MultiSolveResult(X, cols)
 
 
 def dist_solve(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
                maxiter: int = 100, opts=None, x0: np.ndarray | None = None):
-    """Stationary AMG iteration x ← x + V(b − Ax), fused on device."""
+    """Stationary AMG iteration x ← x + V(b − Ax), fused on device.
+
+    ``b`` may be ``[n]`` or ``[n, k]``; the multi-RHS form batches all k
+    systems through one device trace and iterates until every column
+    converges.
+    """
     from .solve import SolveOptions, SolveResult
     opts = opts or SolveOptions()
+    b = np.asarray(b, dtype=np.float64)
+    multi = b.ndim == 2
     progs = dh.programs(opts)
     bd = dh.scatter(b)
-    x = dh.scatter(np.zeros_like(b) if x0 is None else x0)
+    x = dh.scatter(np.zeros_like(b) if x0 is None else np.asarray(x0))
+    if multi:
+        nb = _norms(b)
+        res = [np.asarray(progs["resid_norm_m"](x, bd, dh._arrs),
+                          dtype=np.float64)]
+        for _ in range(maxiter):
+            if (res[-1] / nb < tol).all():
+                break
+            x, rn = progs["cycle_m"](x, bd, dh._arrs)
+            res.append(np.asarray(rn, dtype=np.float64))
+        return _column_results(dh, x, res, nb, tol)
     nb = float(np.linalg.norm(b)) or 1.0
     res = [float(progs["resid_norm"](x, bd, dh._arrs))]
     for it in range(maxiter):
@@ -382,15 +545,30 @@ def dist_solve(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
 
 
 def dist_pcg(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
-             maxiter: int = 200, opts=None):
-    """AMG-preconditioned CG, preconditioner + operator fully on device."""
+             maxiter: int = 200, opts=None, x0: np.ndarray | None = None):
+    """AMG-preconditioned CG, preconditioner + operator fully on device.
+
+    Supports ``x0=`` warm starts and multi-RHS ``b`` of shape ``[n, k]``.
+    """
     from .solve import SolveOptions, SolveResult
     opts = opts or SolveOptions()
+    b = np.asarray(b, dtype=np.float64)
+    multi = b.ndim == 2
     progs = dh.programs(opts)
     bd = dh.scatter(b)
-    x = jnp.zeros_like(bd)
-    r, z, rz, rnorm = progs["pcg_init"](bd, dh._arrs)
+    x = dh.scatter(np.zeros_like(b) if x0 is None else np.asarray(x0))
+    suffix = "_m" if multi else ""
+    r, z, rz, rnorm = progs["pcg_init" + suffix](x, bd, dh._arrs)
     p = z
+    if multi:
+        nb = _norms(b)
+        res = [np.asarray(rnorm, dtype=np.float64)]
+        for _ in range(maxiter):
+            if (res[-1] / nb < tol).all():
+                break
+            x, r, p, rz, rnorm = progs["pcg_step_m"](x, r, p, rz, dh._arrs)
+            res.append(np.asarray(rnorm, dtype=np.float64))
+        return _column_results(dh, x, res, nb, tol)
     nb = float(np.linalg.norm(b)) or 1.0
     res = [float(rnorm)]
     for it in range(maxiter):

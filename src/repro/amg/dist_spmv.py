@@ -108,22 +108,27 @@ class DistOperator:
 
     # ------------------------------------------------------- host-side layout
     def scatter_x(self, x: np.ndarray, dtype=None) -> np.ndarray:
-        """Global x (col_part layout) -> [D, x_local] padded device layout."""
-        if np.shape(x) != (self.col_part.n,):
-            raise ValueError(f"expected x of shape ({self.col_part.n},), "
-                             f"got {np.shape(x)}")
+        """Global x (col_part layout) -> [D, x_local(, k)] device layout.
+
+        ``x`` may be ``[n]`` or ``[n, k]`` (multi-RHS block); the trailing
+        RHS axis is carried through unsharded.
+        """
+        x = np.asarray(x)
+        if x.ndim not in (1, 2) or x.shape[0] != self.col_part.n:
+            raise ValueError(f"expected x of shape ({self.col_part.n},) or "
+                             f"({self.col_part.n}, k), got {x.shape}")
         D = self.n_devices
         dtype = dtype or self.ell_vals.dtype
-        out = np.zeros((D, self.plan.local_n), dtype=dtype)
+        out = np.zeros((D, self.plan.local_n) + x.shape[1:], dtype=dtype)
         for d in range(D):
             lo, hi = self.col_part.local_range(d)
             out[d, : hi - lo] = x[lo:hi]
         return out
 
     def gather_y(self, y_dev: np.ndarray) -> np.ndarray:
-        """[D, rows_local] device layout -> global y (row_part layout)."""
+        """[D, rows_local(, k)] device layout -> global y (row_part layout)."""
         y_dev = np.asarray(y_dev)
-        out = np.zeros(self.row_part.n, dtype=y_dev.dtype)
+        out = np.zeros((self.row_part.n,) + y_dev.shape[2:], dtype=y_dev.dtype)
         for d in range(self.n_devices):
             lo, hi = self.row_part.local_range(d)
             out[lo:hi] = y_dev[d, : hi - lo]

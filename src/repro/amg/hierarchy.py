@@ -27,6 +27,11 @@ class Hierarchy:
     solver: str
     levels: list[Level]
     theta: float
+    # per-hierarchy cache of lowered DistHierarchy objects, keyed by the
+    # frozen build kwargs (see repro.amg.dist_solve._ensure_dist) — lives on
+    # the hierarchy so its lifetime matches the operators it lowers
+    dist_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
 
     @property
     def n_levels(self) -> int:

@@ -4,7 +4,12 @@ The smoother is SpMV-based (Jacobi/Chebyshev), so every relaxation sweep,
 residual, restriction and interpolation reuses the level's communication
 pattern — the operations whose strategy the paper's models select.
 
-Two backends share this API:
+This module owns the **host** (numpy) implementations plus the result
+containers.  The public free functions ``vcycle`` / ``solve`` / ``pcg`` are
+thin wrappers over the session API of :mod:`repro.amg.api`: they bind the
+hierarchy to the requested backend through the backend registry and delegate,
+so they share the same caching and multi-RHS semantics as
+``AMGSolver(config).setup(A)``:
 
 * ``backend="host"`` — the reference numpy implementation below.
 * ``backend="dist"`` — the device-resident path
@@ -13,7 +18,9 @@ Two backends share this API:
   level's model-selected node-aware strategy.  Pass ``dist=`` either a
   prebuilt :class:`~repro.amg.dist_solve.DistHierarchy` (reused across
   calls) or a dict of ``DistHierarchy.build`` kwargs
-  (e.g. ``dict(n_pods=2, lanes=4)``).
+  (e.g. ``dict(n_pods=2, lanes=4)``) — dict kwargs hit a per-hierarchy
+  cache, so repeated calls reuse one ``DistHierarchy`` instead of
+  rebuilding it.
 """
 from __future__ import annotations
 
@@ -26,8 +33,11 @@ from .hierarchy import Hierarchy
 from .smoothers import chebyshev, jacobi
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SolveOptions:
+    """Smoother options.  Frozen (hashable) so it can key program caches and
+    live inside a hashable :class:`~repro.amg.api.AMGConfig`."""
+
     smoother: str = "jacobi"       # "jacobi" | "chebyshev"
     presweeps: int = 1
     postsweeps: int = 1
@@ -41,37 +51,6 @@ def _relax(A: CSR, x, b, opts: SolveOptions, sweeps: int):
     if opts.smoother == "jacobi":
         return jacobi(A, x, b, omega=opts.omega, iterations=sweeps)
     return chebyshev(A, x, b, degree=opts.cheby_degree * sweeps)
-
-
-def _dist_hierarchy(h, dist):
-    from .dist_solve import _ensure_dist
-    return _ensure_dist(h, dist)
-
-
-def vcycle(h: Hierarchy, b: np.ndarray, x: np.ndarray | None = None,
-           opts: SolveOptions | None = None, level: int = 0,
-           backend: str = "host", dist=None) -> np.ndarray:
-    """One V(pre,post)-cycle (Algorithm 2)."""
-    opts = opts or SolveOptions()
-    if backend == "dist":
-        from .dist_solve import dist_vcycle
-        if x is not None or level != 0:
-            raise ValueError("dist vcycle starts from x=0 at level 0")
-        return dist_vcycle(_dist_hierarchy(h, dist), b, opts)
-    if backend != "host":
-        raise ValueError(f"unknown backend {backend!r}")
-    lv = h.levels[level]
-    if x is None:
-        x = np.zeros_like(b)
-    if level == h.n_levels - 1:                       # coarsest: direct solve
-        return np.linalg.lstsq(lv.A.to_dense(), b, rcond=None)[0]
-    x = _relax(lv.A, x, b, opts, opts.presweeps)      # pre-relaxation
-    r = b - lv.A.matvec(x)                            # residual
-    rc = lv.R.matvec(r)                               # restrict
-    ec = vcycle(h, rc, None, opts, level + 1)         # coarse-grid solve
-    x = x + lv.P.matvec(ec)                           # interpolate + correct
-    x = _relax(lv.A, x, b, opts, opts.postsweeps)     # post-relaxation
-    return x
 
 
 @dataclasses.dataclass
@@ -89,16 +68,54 @@ class SolveResult:
         return (r[-1] / r[0]) ** (1.0 / (len(r) - 1))
 
 
-def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
-          opts: SolveOptions | None = None, x0: np.ndarray | None = None,
-          backend: str = "host", dist=None) -> SolveResult:
+@dataclasses.dataclass
+class MultiSolveResult:
+    """Result of a multi-RHS solve: ``x`` is ``[n, k]``, one
+    :class:`SolveResult` per right-hand-side column."""
+
+    x: np.ndarray
+    columns: list[SolveResult]
+
+    @property
+    def n_rhs(self) -> int:
+        return len(self.columns)
+
+    @property
+    def iterations(self) -> int:
+        return max((c.iterations for c in self.columns), default=0)
+
+    @property
+    def converged(self) -> bool:
+        return all(c.converged for c in self.columns)
+
+
+# --------------------------------------------------------------------------
+# Host (numpy) backend implementations
+# --------------------------------------------------------------------------
+
+
+def host_vcycle(h: Hierarchy, b: np.ndarray, x: np.ndarray | None = None,
+                opts: SolveOptions | None = None, level: int = 0) -> np.ndarray:
+    """One V(pre,post)-cycle (Algorithm 2) on the host."""
+    opts = opts or SolveOptions()
+    lv = h.levels[level]
+    if x is None:
+        x = np.zeros_like(b)
+    if level == h.n_levels - 1:                       # coarsest: direct solve
+        return np.linalg.lstsq(lv.A.to_dense(), b, rcond=None)[0]
+    x = _relax(lv.A, x, b, opts, opts.presweeps)      # pre-relaxation
+    r = b - lv.A.matvec(x)                            # residual
+    rc = lv.R.matvec(r)                               # restrict
+    ec = host_vcycle(h, rc, None, opts, level + 1)    # coarse-grid solve
+    x = x + lv.P.matvec(ec)                           # interpolate + correct
+    x = _relax(lv.A, x, b, opts, opts.postsweeps)     # post-relaxation
+    return x
+
+
+def host_solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8,
+               maxiter: int = 100, opts: SolveOptions | None = None,
+               x0: np.ndarray | None = None) -> SolveResult:
     """Stationary AMG iteration: x <- x + V(A, b - Ax)."""
-    if backend == "dist":
-        from .dist_solve import dist_solve
-        return dist_solve(_dist_hierarchy(h, dist), b, tol=tol,
-                          maxiter=maxiter, opts=opts, x0=x0)
-    if backend != "host":
-        raise ValueError(f"unknown backend {backend!r}")
     A = h.levels[0].A
     x = np.zeros_like(b) if x0 is None else x0.copy()
     nb = float(np.linalg.norm(b)) or 1.0
@@ -106,25 +123,19 @@ def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
     for it in range(maxiter):
         if res[-1] / nb < tol:
             return SolveResult(x, res, it, True)
-        x = vcycle(h, b, x, opts)
+        x = host_vcycle(h, b, x, opts)
         res.append(float(np.linalg.norm(b - A.matvec(x))))
     return SolveResult(x, res, maxiter, res[-1] / nb < tol)
 
 
-def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
-        opts: SolveOptions | None = None,
-        backend: str = "host", dist=None) -> SolveResult:
-    """AMG-preconditioned conjugate gradients."""
-    if backend == "dist":
-        from .dist_solve import dist_pcg
-        return dist_pcg(_dist_hierarchy(h, dist), b, tol=tol,
-                        maxiter=maxiter, opts=opts)
-    if backend != "host":
-        raise ValueError(f"unknown backend {backend!r}")
+def host_pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8,
+             maxiter: int = 200, opts: SolveOptions | None = None,
+             x0: np.ndarray | None = None) -> SolveResult:
+    """AMG-preconditioned conjugate gradients (optionally warm-started)."""
     A = h.levels[0].A
-    x = np.zeros_like(b)
-    r = b.copy()
-    z = vcycle(h, r, None, opts)
+    x = np.zeros_like(b) if x0 is None else x0.copy()
+    r = b - A.matvec(x) if x0 is not None else b.copy()
+    z = host_vcycle(h, r, None, opts)
     p = z.copy()
     rz = float(r @ z)
     nb = float(np.linalg.norm(b)) or 1.0
@@ -137,8 +148,50 @@ def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
         x += alpha * p
         r -= alpha * Ap
         res.append(float(np.linalg.norm(r)))
-        z = vcycle(h, r, None, opts)
+        z = host_vcycle(h, r, None, opts)
         rz_new = float(r @ z)
         p = z + (rz_new / rz) * p
         rz = rz_new
     return SolveResult(x, res, maxiter, res[-1] / nb < tol)
+
+
+# --------------------------------------------------------------------------
+# Public free functions: thin wrappers over the session API backend registry
+# --------------------------------------------------------------------------
+
+
+def _bound(h: Hierarchy, backend: str, dist, opts):
+    from .api import bind_hierarchy
+    return bind_hierarchy(h, backend=backend, dist=dist, opts=opts)
+
+
+def vcycle(h: Hierarchy, b: np.ndarray, x: np.ndarray | None = None,
+           opts: SolveOptions | None = None, level: int = 0,
+           backend: str = "host", dist=None) -> np.ndarray:
+    """One V(pre,post)-cycle (Algorithm 2)."""
+    if backend == "host":
+        return host_vcycle(h, b, x, opts, level)
+    if level != 0:
+        raise ValueError(f"backend={backend!r} vcycle starts at level 0")
+    return _bound(h, backend, dist, opts).vcycle(b, x0=x)
+
+
+def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
+          opts: SolveOptions | None = None, x0: np.ndarray | None = None,
+          backend: str = "host", dist=None):
+    """Stationary AMG iteration: x <- x + V(A, b - Ax).
+
+    ``b`` may be ``[n]`` (→ :class:`SolveResult`) or ``[n, k]``
+    (→ :class:`MultiSolveResult`, the k systems solved together).
+    """
+    return _bound(h, backend, dist, opts).solve(b, tol=tol, maxiter=maxiter,
+                                                x0=x0)
+
+
+def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
+        opts: SolveOptions | None = None, x0: np.ndarray | None = None,
+        backend: str = "host", dist=None):
+    """AMG-preconditioned conjugate gradients (``x0=`` warm start supported
+    on every backend; ``b`` may be ``[n]`` or ``[n, k]``)."""
+    return _bound(h, backend, dist, opts).pcg(b, tol=tol, maxiter=maxiter,
+                                              x0=x0)

@@ -1,7 +1,20 @@
-"""Production serving driver: bring up an Engine and drain a request file
+"""Production serving driver: bring up an engine and drain a request file
 or a synthetic workload.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced
+Two engines share this entrypoint:
+
+* ``--solver lm`` (default) — the LM generation ``repro.serve.Engine``::
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced
+
+* ``--solver amg`` — the AMG :class:`~repro.amg.api.SolverEngine`: a stream
+  of ``(matrix_id, b)`` solve requests drained against the hierarchy
+  session cache, same-matrix right-hand sides batched through one
+  multi-RHS device trace::
+
+      PYTHONPATH=src python -m repro.launch.serve --solver amg --requests 16
+      PYTHONPATH=src python -m repro.launch.serve --solver amg \\
+          --amg-backend dist --n 10
 """
 from __future__ import annotations
 
@@ -9,17 +22,7 @@ import argparse
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
+def run_lm(args):
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -48,6 +51,86 @@ def main():
     s = eng.stats
     print(f"[serve] {len(out)} requests in {dt:.2f}s; "
           f"decode {s['tokens'] / max(s['decode_s'], 1e-9):.1f} tok/s")
+
+
+def run_amg(args):
+    import numpy as np
+
+    from ..amg.api import AMGConfig, SolveRequest, SolverEngine
+    from ..amg.problems import laplace_3d
+
+    # the dist backend defaults to fp32, whose residual floor (~1e-7
+    # relative) sits above the host default tol — don't let every solve
+    # burn maxiter chasing an unreachable tolerance
+    tol = args.tol if args.tol is not None else (
+        1e-6 if args.amg_backend == "dist" else 1e-8)
+    cfg = AMGConfig(backend=args.amg_backend, n_pods=args.n_pods,
+                    lanes=args.lanes, tol=tol)
+    eng = SolverEngine(cfg, max_rhs=args.batch)
+    sizes = (args.n, max(4, args.n - 2))
+    mats = {}
+    for n in sizes:
+        mid = f"laplace3d_n{n}"
+        mats[mid] = laplace_3d(n)
+        eng.add_matrix(mid, mats[mid])
+    ids = sorted(mats)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(args.requests):
+        mid = ids[rid % len(ids)]
+        b = rng.standard_normal(mats[mid].nrows)
+        reqs.append(SolveRequest(rid=rid, matrix_id=mid, b=b,
+                                 method=args.method))
+        eng.submit(reqs[-1])
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    worst = 0.0
+    for req in reqs:
+        A = mats[req.matrix_id]
+        rel = (np.linalg.norm(req.b - A.matvec(out[req.rid]))
+               / np.linalg.norm(req.b))
+        worst = max(worst, rel)
+    s = eng.stats
+    print(f"[serve/amg] {len(out)} solves ({len(ids)} matrices, "
+          f"backend={args.amg_backend}) in {dt:.2f}s: "
+          f"{len(out) / dt:.1f} solves/s, {s['batches']} batches "
+          f"({s['batched_rhs']} RHS batched), {s['setups']} setups, "
+          f"{s['unconverged']} unconverged, worst rel residual {worst:.2e}")
+    if worst > tol * 100:
+        raise SystemExit(f"residual check failed: {worst:.2e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--solver", choices=("lm", "amg"), default="lm")
+    ap.add_argument("--arch", help="LM architecture (required for --solver lm)")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    # lm knobs
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # amg knobs
+    ap.add_argument("--amg-backend", default="host",
+                    help="AMG backend registry name (host | dist)")
+    ap.add_argument("--n", type=int, default=8,
+                    help="largest Laplacian grid size for --solver amg")
+    ap.add_argument("--n-pods", type=int, default=1)
+    ap.add_argument("--lanes", type=int, default=1)
+    ap.add_argument("--tol", type=float, default=None,
+                    help="convergence tolerance (default 1e-8 host, "
+                         "1e-6 dist/fp32)")
+    ap.add_argument("--method", choices=("solve", "pcg"), default="pcg")
+    args = ap.parse_args()
+
+    if args.solver == "amg":
+        run_amg(args)
+    else:
+        if not args.arch:
+            raise SystemExit("--solver lm requires --arch")
+        run_lm(args)
 
 
 if __name__ == "__main__":

@@ -4,17 +4,23 @@ test_dist_solve.py (device count must be set before jax init).
 Asserts that the device-resident ``backend="dist"`` V-cycle / stationary /
 PCG solves reproduce the host backend's residual histories to fp32
 tolerance for every halo strategy, that per-level model selection picks a
-non-standard strategy somewhere in the hierarchy, and that the Pallas ELL
-kernel route agrees with the inline form.  Prints "OK <check>" per passing
-check; any exception fails the run.
+non-standard strategy somewhere in the hierarchy, that the Pallas ELL
+kernel route agrees with the inline form, and that an fp64 ``AMGSolver``
+session's batched multi-RHS dist solve matches per-column host solves to
+1e-7 relative residual on the full 2x4 mesh.  Prints "OK <check>" per
+passing check; any exception fails the run.
 """
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)   # for the fp64 multi-RHS check
+
 import numpy as np  # noqa: E402
 
-from repro.amg import SolveOptions, pcg, setup, solve  # noqa: E402
+from repro.amg import AMGConfig, AMGSolver, SolveOptions, pcg, setup, solve  # noqa: E402
 from repro.amg.dist_solve import DistHierarchy  # noqa: E402
 from repro.amg.problems import laplace_3d  # noqa: E402
 from repro.core import BLUE_WATERS  # noqa: E402
@@ -68,6 +74,32 @@ def main():
     cd = solve(h, b, tol=1e-5, maxiter=10, opts=oc, backend="dist", dist=dh3)
     assert history_diff(ch.residuals, cd.residuals) < TOL
     print("OK chebyshev")
+
+    # fp64 AMGSolver session: a [n, 4] multi-RHS dist solve batched through
+    # one device trace matches 4 independent host solves to 1e-7 relative
+    # residual (the PR-1 parity bar), with ONE DistHierarchy build.
+    builds = []
+    orig_build = DistHierarchy.build.__func__
+    DistHierarchy.build = classmethod(
+        lambda cls, *a, **k: builds.append(1) or orig_build(cls, *a, **k))
+    cfg = AMGConfig(backend="dist", n_pods=N_PODS, lanes=LANES,
+                    machine="blue_waters", dtype="float64")
+    bound = AMGSolver(cfg).setup(A)
+    rng = np.random.default_rng(7)
+    B = np.stack([b] + [rng.standard_normal(A.nrows) for _ in range(3)],
+                 axis=1)
+    mres = bound.solve(B, tol=0.0, maxiter=12)
+    assert bound.solve(b, tol=1e-5, maxiter=12).converged  # second call
+    assert builds == [1], f"expected one DistHierarchy build, got {builds}"
+    assert len(bound.dist_hierarchy._programs) == 1
+    for j in range(B.shape[1]):
+        href = solve(h, B[:, j], tol=0.0, maxiter=12)
+        hd = history_diff(href.residuals, mres.columns[j].residuals)
+        xd = (np.linalg.norm(mres.x[:, j] - href.x)
+              / np.linalg.norm(href.x))
+        assert hd < 1e-7 and xd < 1e-7, (j, hd, xd)
+    DistHierarchy.build = classmethod(orig_build)
+    print("OK multi_rhs")
 
     print("ALL_OK")
 

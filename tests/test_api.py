@@ -1,0 +1,281 @@
+"""Session API tests: AMGConfig hashability/round-trip, the backend
+registry, session caching, build-once dist solving, multi-RHS parity, pcg
+x0 symmetry, and the SolverEngine serving surface.
+
+Multi-device fp64 multi-RHS parity runs in the dist_solve subprocess script
+(`dist_solve_script.py`); everything here stays on this process's single
+CPU device (1x1 mesh for dist paths).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.amg import (AMGConfig, AMGSolver, MultiSolveResult, SolveOptions,
+                      SolveRequest, SolverEngine, available_backends, pcg,
+                      setup, solve, vcycle)
+from repro.amg.api import clear_sessions, matrix_fingerprint, session_count
+from repro.amg.problems import laplace_3d
+
+
+@pytest.fixture(autouse=True)
+def _fresh_sessions():
+    clear_sessions()
+    yield
+    clear_sessions()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A = laplace_3d(8)
+    b = A.matvec(np.ones(A.nrows))
+    return A, b
+
+
+# ------------------------------------------------------------------ config
+def test_config_is_hashable_and_round_trips():
+    cfg = AMGConfig(solver="sa", theta=0.1, backend="dist", n_pods=2,
+                    lanes=4, opts=SolveOptions(smoother="chebyshev"),
+                    machine="blue_waters", dtype="float64")
+    assert isinstance(hash(cfg), int)
+    d = {cfg: 1}                                   # usable as a dict key
+    assert d[AMGConfig.from_dict(cfg.to_dict())] == 1
+    assert AMGConfig.from_dict(cfg.to_dict()) == cfg
+    assert cfg.replace(n_pods=4) != cfg
+    assert cfg.replace(n_pods=4).lanes == 4
+
+
+def test_config_validates_machine_and_dtype():
+    with pytest.raises(ValueError):
+        AMGConfig(machine="cray_xk7")
+    with pytest.raises(ValueError):
+        AMGConfig(dtype="float16")
+
+
+def test_solve_options_frozen():
+    opts = SolveOptions()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.omega = 1.0
+
+
+# ---------------------------------------------------------------- registry
+def test_unknown_backend_errors_name_the_registry(problem):
+    A, b = problem
+    with pytest.raises(ValueError, match="registered backends"):
+        AMGSolver(AMGConfig(backend="quantum"))
+    h = setup(A)
+    with pytest.raises(ValueError, match="registered backends"):
+        solve(h, b, backend="quantum")
+    assert {"host", "dist"} <= set(available_backends())
+
+
+# ----------------------------------------------------------- session cache
+def test_session_cache_per_matrix_and_config(problem):
+    A, b = problem
+    cfg = AMGConfig()
+    bound = AMGSolver(cfg).setup(A)
+    assert AMGSolver(cfg).setup(A) is bound        # same matrix + config
+    assert session_count() == 1
+    other = AMGSolver(cfg.replace(theta=0.5)).setup(A)
+    assert other is not bound                      # config is half the key
+    assert other.hierarchy is not bound.hierarchy  # theta changes the setup
+    A2 = laplace_3d(6)
+    assert AMGSolver(cfg).setup(A2) is not bound   # matrix is the other half
+    assert session_count() == 3
+    assert matrix_fingerprint(A) != matrix_fingerprint(A2)
+    # configs differing only in solve-phase knobs get their own bound (their
+    # own defaults) but share ONE expensive hierarchy setup
+    loose = AMGSolver(cfg.replace(tol=1e-4, maxiter=7)).setup(A)
+    assert loose is not bound and loose.hierarchy is bound.hierarchy
+    assert loose.solve(b).iterations <= 7
+
+
+# ---------------------------------------------------- dist builds/compiles
+def test_dist_bound_builds_and_compiles_once(problem, monkeypatch):
+    """Acceptance: two consecutive bound.solve() calls with backend="dist"
+    build the DistHierarchy and compile its programs exactly once."""
+    import repro.amg.dist_solve as ds
+    A, b = problem
+    builds = []
+    orig = ds.DistHierarchy.build.__func__
+    monkeypatch.setattr(
+        ds.DistHierarchy, "build",
+        classmethod(lambda cls, *a, **k: builds.append(1) or orig(cls, *a, **k)))
+    cfg = AMGConfig(backend="dist", n_pods=1, lanes=1, strategy="standard")
+    bound = AMGSolver(cfg).setup(A)
+    r1 = bound.solve(b, tol=1e-5, maxiter=20)
+    r2 = bound.solve(b, tol=1e-5, maxiter=20)
+    assert r1.converged and r2.converged
+    assert len(builds) == 1                        # lowered exactly once
+    assert len(bound.dist_hierarchy._programs) == 1  # one compiled program set
+    np.testing.assert_allclose(r1.x, r2.x)
+
+
+def test_ensure_dist_kwargs_dict_hits_cache(problem, monkeypatch):
+    """Regression: repeated solve(..., dist={kwargs}) calls reuse ONE
+    DistHierarchy instead of rebuilding it each call."""
+    import repro.amg.dist_solve as ds
+    A, b = problem
+    h = setup(A)
+    builds = []
+    orig = ds.DistHierarchy.build.__func__
+    monkeypatch.setattr(
+        ds.DistHierarchy, "build",
+        classmethod(lambda cls, *a, **k: builds.append(1) or orig(cls, *a, **k)))
+    kw = {"n_pods": 1, "lanes": 1, "strategy": "standard"}
+    solve(h, b, tol=1e-5, maxiter=5, backend="dist", dist=dict(kw))
+    solve(h, b, tol=1e-5, maxiter=5, backend="dist", dist=dict(kw))
+    pcg(h, b, tol=1e-5, maxiter=5, backend="dist", dist=dict(kw))
+    assert len(builds) == 1
+    assert len(h.dist_cache) == 1
+    dh = next(iter(h.dist_cache.values()))
+    # a different kwargs dict is a different lowering
+    solve(h, b, tol=1e-5, maxiter=5, backend="dist",
+          dist={**kw, "strategy": "nap3"})
+    assert len(builds) == 2 and len(h.dist_cache) == 2
+    assert next(iter(h.dist_cache.values())) is dh
+
+
+# ---------------------------------------------------------------- multi-RHS
+def test_host_multi_rhs_matches_independent_solves(problem):
+    A, b = problem
+    rng = np.random.default_rng(3)
+    B = np.stack([b, rng.standard_normal(A.nrows),
+                  rng.standard_normal(A.nrows)], axis=1)
+    bound = AMGSolver(AMGConfig()).setup(A)
+    mres = bound.solve(B)
+    assert isinstance(mres, MultiSolveResult)
+    assert mres.x.shape == B.shape and mres.n_rhs == 3
+    for j in range(3):
+        ref = bound.solve(B[:, j])
+        np.testing.assert_allclose(mres.x[:, j], ref.x)
+        assert mres.columns[j].iterations == ref.iterations
+    # free-function wrapper returns the same thing
+    wres = solve(setup(A), B)
+    np.testing.assert_allclose(wres.x, mres.x)
+
+
+def test_dist_multi_rhs_parity_single_device(problem):
+    """fp32 1x1-mesh parity of the batched dist solve against per-column
+    host solves (the tight fp64 multi-device check lives in
+    dist_solve_script.py)."""
+    A, b = problem
+    rng = np.random.default_rng(5)
+    B = np.stack([b, rng.standard_normal(A.nrows)], axis=1)
+    h = setup(A)
+    cfg = AMGConfig(backend="dist", n_pods=1, lanes=1, strategy="standard")
+    bound = AMGSolver(cfg).setup(A)
+    mres = bound.solve(B, tol=0.0, maxiter=10)
+    for j in range(B.shape[1]):
+        ref = solve(h, B[:, j], tol=0.0, maxiter=10)
+        r0 = ref.residuals[0]
+        for a, c in zip(ref.residuals, mres.columns[j].residuals):
+            assert abs(a - c) / r0 < 2e-4
+    # per-column iterations match host semantics: the count at which each
+    # column first converged, not the batch-wide cycle count
+    msol = bound.solve(B, tol=1e-5, maxiter=50)
+    for j in range(B.shape[1]):
+        ref = solve(h, B[:, j], tol=1e-5, maxiter=50)
+        assert abs(msol.columns[j].iterations - ref.iterations) <= 1
+        assert len(msol.columns[j].residuals) == \
+            msol.columns[j].iterations + 1
+    # batched pcg drives every column to convergence
+    pres = bound.pcg(B, tol=1e-6, maxiter=40)
+    assert pres.converged
+    rel = [np.linalg.norm(B[:, j] - A.matvec(pres.x[:, j]))
+           / np.linalg.norm(B[:, j]) for j in range(B.shape[1])]
+    assert max(rel) < 1e-5
+    # vcycle accepts [n, k] too
+    y = bound.vcycle(B)
+    assert y.shape == B.shape
+
+
+def test_dist_multi_rhs_zero_column_does_not_poison_batch(problem):
+    """A zero RHS column (rz = pAp = 0) must step by zero, not spread NaNs
+    to the other columns of the batched PCG."""
+    A, b = problem
+    B = np.stack([b, np.zeros_like(b)], axis=1)
+    cfg = AMGConfig(backend="dist", n_pods=1, lanes=1, strategy="standard")
+    res = AMGSolver(cfg).setup(A).pcg(B, tol=1e-6, maxiter=40)
+    assert res.converged
+    assert np.all(np.isfinite(res.x))
+    np.testing.assert_allclose(res.x[:, 1], 0.0)
+    rel = (np.linalg.norm(b - A.matvec(res.x[:, 0])) / np.linalg.norm(b))
+    assert rel < 1e-5
+
+
+def test_bad_b_shape_rejected(problem):
+    A, b = problem
+    bound = AMGSolver(AMGConfig()).setup(A)
+    with pytest.raises(ValueError, match="b must be"):
+        bound.solve(b[:-1])
+    with pytest.raises(ValueError, match="b must be"):
+        bound.solve(np.ones((A.nrows, 2, 2)))
+
+
+# --------------------------------------------------------------- pcg / x0
+def test_pcg_x0_symmetry(problem):
+    A, b = problem
+    h = setup(A)
+    ref = pcg(h, b, tol=1e-8)
+    warm = pcg(h, b, tol=1e-8, x0=ref.x)
+    assert warm.converged and warm.iterations == 0  # already at the solution
+    cold = pcg(h, b, tol=1e-8, x0=np.zeros_like(b))
+    assert cold.iterations == ref.iterations
+    np.testing.assert_allclose(cold.x, ref.x)
+    # dist backend takes x0 the same way
+    cfg = AMGConfig(backend="dist", n_pods=1, lanes=1, strategy="standard")
+    bound = AMGSolver(cfg).setup(A)
+    dwarm = bound.pcg(b, tol=1e-5, x0=ref.x)     # fp32 residual floor
+    assert dwarm.converged and dwarm.iterations == 0
+    # and vcycle rejects x0 cleanly where unsupported (dist starts at 0)
+    with pytest.raises(ValueError, match="x0"):
+        bound.vcycle(b, x0=b)
+    with pytest.raises(ValueError):
+        vcycle(h, b, x=b, backend="dist",
+               dist={"n_pods": 1, "lanes": 1, "strategy": "standard"})
+
+
+# ------------------------------------------------------------ SolverEngine
+def test_solver_engine_smoke():
+    A1, A2 = laplace_3d(6), laplace_3d(8)
+    eng = SolverEngine(AMGConfig(tol=1e-8), max_rhs=3)
+    eng.add_matrix("m1", A1)
+    eng.add_matrix("m2", A2)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(7):
+        mid = "m1" if rid % 2 == 0 else "m2"
+        A = A1 if mid == "m1" else A2
+        reqs.append(SolveRequest(rid=rid, matrix_id=mid,
+                                 b=rng.standard_normal(A.nrows)))
+        eng.submit(reqs[-1])
+    out = eng.run()
+    assert sorted(out) == list(range(7))
+    for req in reqs:
+        A = A1 if req.matrix_id == "m1" else A2
+        rel = (np.linalg.norm(req.b - A.matvec(out[req.rid]))
+               / np.linalg.norm(req.b))
+        assert rel < 1e-6, (req.rid, rel)
+    # convergence is surfaced per request, not silently discarded
+    assert sorted(eng.diagnostics) == list(range(7))
+    assert all(d["converged"] and d["iterations"] > 0
+               for d in eng.diagnostics.values())
+    assert eng.stats["unconverged"] == 0
+    # 4 m1-requests and 3 m2-requests at max_rhs=3 → 2 + 1 batches
+    assert eng.stats["batches"] == 3
+    assert eng.stats["setups"] == 2
+    assert eng.stats["batched_rhs"] == 6        # 3 + 3 (the 1-request tail
+    #                                             of m1 runs unbatched)
+    # draining again is a no-op; unknown ids are rejected
+    assert eng.run() == {}
+    with pytest.raises(KeyError, match="unknown matrix_id"):
+        eng.submit(SolveRequest(rid=99, matrix_id="nope", b=np.ones(3)))
+    with pytest.raises(ValueError, match="unknown method"):
+        eng.submit(SolveRequest(rid=99, matrix_id="m1",
+                                b=np.ones(A1.nrows), method="gmres"))
+    with pytest.raises(ValueError, match="must be"):
+        eng.submit(SolveRequest(rid=99, matrix_id="m1", b=np.ones(3)))
+    # same-engine re-setup hits the bound cache, not a new hierarchy
+    assert eng.bound_for("m1") is eng.bound_for("m1")
+    assert eng.stats["setups"] == 2

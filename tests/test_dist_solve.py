@@ -23,7 +23,7 @@ EXPECTED = [
     "OK solve_standard", "OK pcg_standard",
     "OK solve_nap2", "OK pcg_nap2",
     "OK solve_nap3", "OK pcg_nap3",
-    "OK auto_select", "OK pallas_path", "OK chebyshev",
+    "OK auto_select", "OK pallas_path", "OK chebyshev", "OK multi_rhs",
     "ALL_OK",
 ]
 
@@ -146,6 +146,13 @@ def test_benchmark_smoke_mode(tmp_path):
     data = json.loads(out_json.read_text())
     assert data["benchmark"] == "dist_solve"
     assert any(r["name"].startswith("dist_solve_auto_L") for r in data["rows"])
+    # weak-scaling sweep: ≥3 problem sizes recorded
+    assert sum(r["name"].startswith("dist_weak_n") for r in data["rows"]) >= 3
+    # cached-vs-cold AMGSolver sessions: the cached call must not pay the
+    # DistHierarchy rebuild + recompile
+    by_name = {r["name"]: r for r in data["rows"]}
+    assert by_name["amg_solver_cached"]["us_per_call"] < \
+        by_name["amg_solver_cold"]["us_per_call"]
 
 
 @pytest.mark.slow
