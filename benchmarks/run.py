@@ -3,8 +3,8 @@ Prints ``name,us_per_call,derived`` CSV."""
 import sys
 import time
 
-from . import (amg_levels, amg_scaling, comm_strategies, dist_solve,
-               lm_roofline, pingpong_model, ptap_sweeps)
+from . import (amg_levels, amg_scaling, comm_strategies, dist_setup,
+               dist_solve, lm_roofline, pingpong_model, ptap_sweeps)
 from repro.core.perf_model import BLUE_WATERS, QUARTZ
 
 MODULES = [
@@ -20,6 +20,7 @@ MODULES = [
     ("dist_solve", lambda: dist_solve.rows(smoke=True)),
     ("dist_solve_weak", lambda: dist_solve.weak_rows(smoke=True)),
     ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
+    ("dist_setup", lambda: dist_setup.rows(smoke=True)),
     ("roofline", lambda: lm_roofline.rows()),
 ]
 

@@ -20,6 +20,12 @@ Backends plug in through :func:`~repro.amg.api.register_backend`
 :class:`~repro.amg.api.SolverEngine` serves batched ``(matrix_id, b)``
 request streams on top of the same cache.
 
+``AMGConfig(setup_backend="dist", backend="dist")`` additionally runs the
+**setup phase** partitioned (:mod:`repro.amg.dist_setup`): the Galerkin
+SpGEMMs A·P and Pᵀ·(AP) exchange off-process CSR rows under model-selected
+standard/NAP-2/NAP-3 schedules and every level is born partitioned — no
+host gather/re-scatter between setup and solve.
+
 The classic free functions remain as thin wrappers over that API:
 ``setup(A)`` builds a host ``Hierarchy`` (Algorithm 1), and
 ``solve``/``pcg``/``vcycle`` accept ``backend="host"|"dist"`` plus the
@@ -38,6 +44,12 @@ __all__ = ["CSR", "Hierarchy", "Level", "setup", "SolveOptions", "SolveResult",
            "MultiSolveResult", "pcg", "solve", "vcycle", "AMGConfig",
            "AMGSolver", "BoundSolver", "SolverEngine", "SolveRequest",
            "available_backends", "register_backend", "DistHierarchy"]
+
+# NOTE: the distributed setup entrypoint is deliberately NOT re-exported
+# here — a lazy ``dist_setup`` attribute would collide with the
+# ``repro.amg.dist_setup`` submodule name and get rebound to the module by
+# the import system.  Import it as ``from repro.amg.dist_setup import
+# dist_setup`` (or go through ``AMGConfig(setup_backend="dist")``).
 
 
 def __getattr__(name):

@@ -66,6 +66,10 @@ class AMGConfig:
     aggressive: bool = False
     prolongation_sweeps: int = 1
     seed: int = 42
+    # "host": serial numpy setup; "dist": the partitioned node-aware setup
+    # (repro.amg.dist_setup) — levels are born partitioned and only the
+    # "dist" solve backend can consume them
+    setup_backend: str = "host"
     # -- solve phase (Algorithm 2)
     opts: SolveOptions = dataclasses.field(default_factory=SolveOptions)
     tol: float = 1e-8
@@ -86,6 +90,17 @@ class AMGConfig:
         if self.dtype not in _DTYPES:
             raise ValueError(f"dtype must be one of {_DTYPES}, "
                              f"got {self.dtype!r}")
+        if self.setup_backend not in ("host", "dist"):
+            raise ValueError(f"setup_backend must be 'host' or 'dist', "
+                             f"got {self.setup_backend!r}")
+        if self.setup_backend == "dist" and self.backend != "dist":
+            raise ValueError(
+                "setup_backend='dist' births partitioned levels that only "
+                f"backend='dist' can consume (got backend={self.backend!r})")
+        if self.setup_backend == "dist" and self.solver != "rs":
+            raise ValueError(
+                "setup_backend='dist' supports solver='rs' only "
+                f"(got solver={self.solver!r})")
         from ..core import MACHINES
         if self.machine not in MACHINES:
             raise ValueError(f"unknown machine {self.machine!r}; "
@@ -196,7 +211,9 @@ class BoundSolver:
 
     backend_name = "?"
 
-    def __init__(self, config: AMGConfig, hierarchy: Hierarchy):
+    def __init__(self, config: AMGConfig, hierarchy: Hierarchy | None):
+        # ``hierarchy`` is None on the setup_backend="dist" path: the levels
+        # were born partitioned and no host Hierarchy ever existed.
         self.config = config
         self.hierarchy = hierarchy
 
@@ -209,6 +226,11 @@ class BoundSolver:
     # ------------------------------------------------------------ properties
     @property
     def A(self) -> CSR:
+        if self.hierarchy is None:
+            raise ValueError(
+                "this solver was set up with setup_backend='dist': levels "
+                "are partitioned across the mesh and no global fine-grid "
+                "CSR exists")
         return self.hierarchy.levels[0].A
 
     @property
@@ -300,6 +322,21 @@ class DistBoundSolver(BoundSolver):
         self._dist = _ensure_dist(h, dist)     # raises when dist is missing
         return self
 
+    @classmethod
+    def from_dist_setup(cls, config: AMGConfig, dh) -> "DistBoundSolver":
+        """Bind a hierarchy that was **born partitioned** (the
+        ``setup_backend="dist"`` path): there is no host ``Hierarchy``, only
+        the already-lowered ``DistHierarchy``."""
+        self = cls(config, None)
+        self._dist = dh
+        return self
+
+    @property
+    def n(self) -> int:
+        if self.hierarchy is None:
+            return self._dist.levels[0].A.row_part.n
+        return self.A.nrows
+
     @property
     def dist_hierarchy(self):
         """The lowered hierarchy; built on first access, then reused.
@@ -346,13 +383,22 @@ SESSION_CACHE_SIZE = 16
 _SESSIONS: "OrderedDict[tuple[str, AMGConfig], BoundSolver]" = OrderedDict()
 # hierarchies keyed by (matrix fingerprint, setup kwargs) only, so configs
 # that differ in solve/backend knobs share one setup (and, through the
-# hierarchy's dist_cache, one lowering)
-_SETUPS: "OrderedDict[tuple, Hierarchy]" = OrderedDict()
+# hierarchy's dist_cache, one lowering).  setup_backend="dist" entries hold
+# a born-partitioned DistHierarchy instead of a host Hierarchy (keyed with
+# the mesh/strategy/dtype knobs the lowering depends on).
+_SETUPS: "OrderedDict[tuple, object]" = OrderedDict()
 
 
 def clear_sessions() -> None:
     _SESSIONS.clear()
     _SETUPS.clear()
+
+
+def _cache_put(cache: OrderedDict, key, value) -> None:
+    """Insert with oldest-first eviction at the shared cache size."""
+    cache[key] = value
+    while len(cache) > SESSION_CACHE_SIZE:
+        cache.popitem(last=False)
 
 
 def session_count() -> int:
@@ -383,21 +429,58 @@ class AMGSolver:
         if bound is not None:
             _SESSIONS.move_to_end(key)
             return bound
-        skw = self.config.setup_kwargs()
-        skey = (fp, tuple(sorted(skw.items())))
-        h = _SETUPS.get(skey)
-        if h is None:
-            h = _hierarchy_setup(A, **skw)
-            _SETUPS[skey] = h
-            while len(_SETUPS) > SESSION_CACHE_SIZE:
-                _SETUPS.popitem(last=False)
+        if self.config.setup_backend == "dist":
+            bound = self._setup_dist(A, fp)
+        else:
+            skw = self.config.setup_kwargs()
+            skey = (fp, tuple(sorted(skw.items())))
+            h = _SETUPS.get(skey)
+            if h is None:
+                h = _hierarchy_setup(A, **skw)
+                _cache_put(_SETUPS, skey, h)
+            else:
+                _SETUPS.move_to_end(skey)
+            bound = backend_class(self.config.backend)(self.config, h)
+        _cache_put(_SESSIONS, key, bound)
+        return bound
+
+    def _setup_dist(self, A: CSR, fp: str) -> BoundSolver:
+        """The setup_backend="dist" path: run the partitioned node-aware
+        setup (NAP SpGEMM Galerkin products) and bind the resulting
+        DistHierarchy.  Two cache tiers mirror the host path's setup/lower
+        split: the partitioned blocks are keyed by the knobs the setup loop
+        depends on (setup kwargs + mesh + strategy + machine), the lowered
+        DistHierarchy additionally by the pure lowering knobs — so configs
+        differing only in dtype/kernel/reduce knobs re-lower but never
+        re-run the setup loop, and solve-knob-only changes share both."""
+        c = self.config
+        base = (fp, tuple(sorted(c.setup_kwargs().items())),
+                c.n_pods, c.lanes, c.strategy, c.machine)
+        skey = base + ("dist_lowered", c.dtype, c.use_kernel, c.interpret,
+                       c.reduce_strategy)
+        dh = _SETUPS.get(skey)
+        if dh is None:
+            pkey = base + ("dist_partitioned",)
+            cached = _SETUPS.get(pkey)
+            if cached is None:
+                from ..core import MACHINES
+                from .dist_setup import dist_setup_partitioned
+                plevels, records = dist_setup_partitioned(
+                    A, c.n_pods, c.lanes, params=MACHINES[c.machine],
+                    strategy=c.strategy, **c.setup_kwargs())
+                _cache_put(_SETUPS, pkey, (plevels, records))
+            else:
+                plevels, records = cached
+                _SETUPS.move_to_end(pkey)
+            from .dist_solve import DistHierarchy
+            bk = c.dist_build_kwargs()
+            dh = DistHierarchy.from_partitioned(
+                plevels, bk.pop("n_pods"), bk.pop("lanes"),
+                setup_records=records, **bk)
+            _cache_put(_SETUPS, skey, dh)
         else:
             _SETUPS.move_to_end(skey)
-        bound = backend_class(self.config.backend)(self.config, h)
-        _SESSIONS[key] = bound
-        while len(_SESSIONS) > SESSION_CACHE_SIZE:
-            _SESSIONS.popitem(last=False)
-        return bound
+        return backend_class(c.backend).from_dist_setup(c, dh)
 
 
 # --------------------------------------------------------------------------

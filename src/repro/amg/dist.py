@@ -3,11 +3,13 @@ operation, strategy selection (paper §4), and modeled phase costs.
 
 This is the glue between :mod:`repro.amg` (numerics) and :mod:`repro.core`
 (the paper's node-aware schedules + max-rate models).  Everything here is
-host-side analysis (numpy only); the device execution of the same selections
-lives in :mod:`repro.amg.dist_solve`, which consumes
-:func:`vector_comm_graph` / :func:`rect_vector_graph` per level and per
-operator {A, P, R} to pick each operation's strategy with
-:func:`repro.core.selector.select` before compiling the fused V-cycle.
+host-side analysis (numpy only); the execution of the same selections lives
+in :mod:`repro.amg.dist_solve` (solve phase: :func:`vector_comm_graph` /
+:func:`rect_vector_graph` per level and per operator {A, P, R} feed
+:func:`repro.core.selector.select` before compiling the fused V-cycle) and
+:mod:`repro.amg.dist_setup` (setup phase: :func:`matrix_comm_graph` is the
+schedule source for the NAP matrix-row exchanges of the Galerkin SpGEMMs
+A·P and Pᵀ·(AP)).
 """
 from __future__ import annotations
 
@@ -42,17 +44,27 @@ def matrix_comm_graph(A: CSR, B: CSR, part: Partition,
                       b_part: Partition | None = None) -> CommGraph:
     """SpGEMM A·B pattern: rows of B for off-process columns of A (Fig. 7).
 
-    Indices are *rows of B*; weights are per-row byte sizes of B.
+    ``part`` partitions the rows of A; ``b_part`` partitions the rows of B
+    (i.e. the column space of A) and defaults to ``part`` — the A·P case,
+    where P's rows follow A's row partition.  For Pᵀ·(AP) pass the coarse
+    partition as ``part`` and the fine partition as ``b_part``.
+
+    Returned graph: ``partition`` is ``b_part`` and ``need[p]`` holds global
+    *row indices of B* — the columns of rank p's rows of A that fall outside
+    p's owned B-row range ``b_part.local_range(p)``.  ``weights[i]`` is the
+    byte size of B row i when it is communicated once
+    (``MATRIX_ENTRY·nnz(row) + MATRIX_ROW_HEADER``), so the §3 schedules and
+    max-rate models price whole-row transfers, matching the paper's
+    observation that matrix communication "retains the same communication
+    pattern as vectors, but requires entire rows".
     """
     b_part = b_part or part
     weights = (np.diff(B.indptr) * MATRIX_ENTRY + MATRIX_ROW_HEADER).astype(np.float64)
     offp = []
     for p in range(part.topo.n_procs):
-        lo, hi = part.local_range(p)          # A's column ownership == B's rows
-        blo, bhi = b_part.local_range(p)
-        rlo, rhi = part.local_range(p)
-        cols = A.offproc_columns(blo, bhi, rlo, rhi)
-        offp.append(cols)
+        rlo, rhi = part.local_range(p)        # rank p's rows of A
+        blo, bhi = b_part.local_range(p)      # rank p's rows of B
+        offp.append(A.offproc_columns(blo, bhi, rlo, rhi))
     return CommGraph(partition=b_part, need=offp, weights=weights)
 
 
@@ -116,7 +128,12 @@ def rect_vector_graph(M: CSR, row_part: Partition, col_part: Partition) -> CommG
 
 def phase_costs(ops: list[OpComm], n_levels: int):
     """Aggregate modeled comm seconds per level for solve/setup phases, per
-    strategy and for the model-selected mix (Figs. 2/4/14/15)."""
+    strategy and for the model-selected mix (Figs. 2/4/14/15).
+
+    An op whose selection was run over a strategy subset simply contributes
+    nothing to the strategies it never modeled (the column stays a partial
+    sum) — a missing entry must not poison the whole level with ``inf``.
+    """
     solve_ops = ("spmv_A", "restrict", "interp")
     out = {"solve": {}, "setup": {}}
     for phase, opset in (("solve", solve_ops), ("setup", ("spgemm_AP", "spgemm_PtAP"))):
@@ -127,7 +144,9 @@ def phase_costs(ops: list[OpComm], n_levels: int):
                 if oc.level != l or oc.op not in opset:
                     continue
                 for s in ("standard", "nap2", "nap3"):
-                    row[s] += oc.selection.times.get(s, float("inf"))
+                    t = oc.selection.times.get(s)
+                    if t is not None and np.isfinite(t):
+                        row[s] += t
                 row["selected"] += oc.selection.modeled_time
             per_level[l] = row
         out[phase] = per_level

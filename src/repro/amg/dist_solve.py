@@ -49,7 +49,8 @@ from ..core.perf_model import TPU_V5E, MachineParams
 from ..core.selector import select
 from ..core.topology import Partition, Topology
 from .dist import rect_vector_graph
-from .dist_spmv import DistOperator, build_dist_operator
+from .dist_spmv import (DistOperator, build_dist_operator,
+                        build_dist_operator_from_blocks)
 from .hierarchy import Hierarchy
 from .interpolation import estimate_rho_DinvA
 from .smoothers import chebyshev_coeffs, chebyshev_recurrence
@@ -81,10 +82,13 @@ class DistHierarchy:
     option set.
     """
 
-    def __init__(self, h: Hierarchy, n_pods: int, lanes: int,
+    def __init__(self, h: Hierarchy | None, n_pods: int, lanes: int,
                  levels: list[DistLevel], mesh, dtype, use_kernel: bool,
                  interpret: bool, reduce_strategy: str):
+        # ``h`` is None when the hierarchy was born partitioned
+        # (repro.amg.dist_setup): no host Hierarchy ever existed.
         self.h = h
+        self.setup_records: list = []
         self.n_pods, self.lanes = n_pods, lanes
         self.levels = levels
         self.mesh = mesh
@@ -115,8 +119,48 @@ class DistHierarchy:
         ``strategy="auto"`` picks per level and per operator from the
         performance models; any explicit strategy name forces it everywhere.
         """
-        topo = Topology(n_nodes=n_pods, ppn=lanes)
-        D = topo.n_procs
+        mesh, use_kernel, interpret = cls._resolve_mesh(
+            n_pods, lanes, mesh, use_kernel, interpret)
+        levels = cls._lower_levels(h.levels, n_pods, lanes, params=params,
+                                   strategy=strategy, strategies=strategies,
+                                   dtype=dtype)
+        return cls(h, n_pods, lanes, levels, mesh, dtype, use_kernel,
+                   interpret, reduce_strategy)
+
+    @classmethod
+    def from_partitioned(cls, plevels, n_pods: int, lanes: int, *,
+                         setup_records=None,
+                         params: MachineParams = TPU_V5E,
+                         strategy: str = "auto",
+                         strategies: tuple[str, ...] = SOLVE_STRATEGIES,
+                         dtype=jnp.float32, mesh=None,
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None,
+                         reduce_strategy: str = "nap3") -> "DistHierarchy":
+        """Lower levels that are **already partitioned** (born on the mesh).
+
+        ``plevels`` mirror :class:`~repro.amg.hierarchy.Level` but each
+        operator is a :class:`~repro.amg.dist_setup.BlockMatrix` (per-device
+        global-shape row blocks) — the output of the distributed setup
+        phase.  No host gather/re-scatter happens between setup and solve;
+        ``setup_records`` (per-level SpGEMM strategy selections + measured
+        exchange stats) are merged into the selection table.
+        """
+        mesh, use_kernel, interpret = cls._resolve_mesh(
+            n_pods, lanes, mesh, use_kernel, interpret)
+        levels = cls._lower_levels(plevels, n_pods, lanes, params=params,
+                                   strategy=strategy, strategies=strategies,
+                                   dtype=dtype)
+        for rec in setup_records or ():
+            levels[rec.level].strategies[rec.op] = rec.strategy
+            levels[rec.level].modeled[rec.op] = dict(rec.modeled)
+        self = cls(None, n_pods, lanes, levels, mesh, dtype, use_kernel,
+                   interpret, reduce_strategy)
+        self.setup_records = list(setup_records or ())
+        return self
+
+    @staticmethod
+    def _resolve_mesh(n_pods, lanes, mesh, use_kernel, interpret):
         on_tpu = jax.default_backend() == "tpu"
         if use_kernel is None:
             use_kernel = on_tpu
@@ -124,6 +168,16 @@ class DistHierarchy:
             interpret = not on_tpu
         if mesh is None:
             mesh = jax.make_mesh((n_pods, lanes), DEV_AXES)
+        return mesh, use_kernel, interpret
+
+    @classmethod
+    def _lower_levels(cls, src_levels, n_pods: int, lanes: int, *, params,
+                      strategy, strategies, dtype) -> list[DistLevel]:
+        """Per-level lowering shared by :meth:`build` (host ``Level`` s with
+        global CSRs) and :meth:`from_partitioned` (``BlockMatrix`` levels):
+        comm graphs, strategy selection, halo plans, ELL blocks."""
+        topo = Topology(n_nodes=n_pods, ppn=lanes)
+        D = topo.n_procs
 
         def choose(graph, op_name):
             if strategy != "auto":
@@ -131,14 +185,32 @@ class DistHierarchy:
             sel = select(graph, params, strategies)
             return sel.strategy, dict(sel.times)
 
-        parts = [Partition.balanced(lv.A.nrows, topo) for lv in h.levels]
+        def make_op(M, strat, row_part, col_part, graph):
+            blocks = getattr(M, "blocks", None)
+            if blocks is not None:
+                return build_dist_operator_from_blocks(
+                    blocks, n_pods, lanes, strat, row_part=row_part,
+                    col_part=col_part, graph=graph, dtype=dtype)
+            return build_dist_operator(M, n_pods, lanes, strat,
+                                       row_part=row_part, col_part=col_part,
+                                       graph=graph, dtype=dtype)
+
+        def part_of(lv):
+            # a BlockMatrix level carries the partition its blocks were
+            # built on — reuse it rather than assuming balanced rows
+            p = getattr(lv.A, "part", None)
+            if p is not None:
+                assert p.topo == topo, (p.topo, topo)
+                return p
+            return Partition.balanced(lv.A.nrows, topo)
+
+        parts = [part_of(lv) for lv in src_levels]
         levels: list[DistLevel] = []
-        for l, lv in enumerate(h.levels):
+        for l, lv in enumerate(src_levels):
             part = parts[l]
             gA = rect_vector_graph(lv.A, part, part)
             sA, tA = choose(gA, "spmv_A")
-            Aop = build_dist_operator(lv.A, n_pods, lanes, sA, row_part=part,
-                                      col_part=part, graph=gA, dtype=dtype)
+            Aop = make_op(lv.A, sA, part, part, gA)
             d = lv.A.diagonal()
             dinv = 1.0 / np.where(d == 0, 1.0, d)
             dinv_dev = np.zeros((D, part.max_local_size), dtype=np.float64)
@@ -148,22 +220,27 @@ class DistHierarchy:
             dl = DistLevel(A=Aop, dinv=dinv_dev,
                            strategies={"spmv_A": sA},
                            modeled={"spmv_A": tA})
-            if lv.P is not None:
+            if lv.P is not None and l + 1 < len(src_levels):
                 cpart = parts[l + 1]
                 gP = rect_vector_graph(lv.P, part, cpart)
                 sP, tP = choose(gP, "interp")
-                dl.P = build_dist_operator(lv.P, n_pods, lanes, sP,
-                                           row_part=part, col_part=cpart,
-                                           graph=gP, dtype=dtype)
+                dl.P = make_op(lv.P, sP, part, cpart, gP)
                 gR = rect_vector_graph(lv.R, cpart, part)
                 sR, tR = choose(gR, "restrict")
-                dl.R = build_dist_operator(lv.R, n_pods, lanes, sR,
-                                           row_part=cpart, col_part=part,
-                                           graph=gR, dtype=dtype)
+                dl.R = make_op(lv.R, sR, cpart, part, gR)
                 dl.rho = estimate_rho_DinvA(lv.A)
                 dl.strategies.update(interp=sP, restrict=sR)
                 dl.modeled.update(interp=tP, restrict=tR)
             else:
+                if lv.P is not None:
+                    # a stall-pop in setup leaves a dangling P on the last
+                    # level; its A is by construction too large to treat as
+                    # the coarsest grid, so fail loudly rather than dense-
+                    # solving it
+                    raise ValueError(
+                        f"level {l} has P but no coarser level (coarsening "
+                        f"stalled); refusing the dense coarse solve at "
+                        f"n={lv.A.nrows}")
                 # coarsest: distributed dense pseudo-inverse solve
                 pinv = np.linalg.pinv(lv.A.to_dense())
                 m = part.max_local_size
@@ -176,8 +253,7 @@ class DistHierarchy:
                             pinv[lo:hi, elo:ehi]
                 dl.coarse_inv = cinv
             levels.append(dl)
-        return cls(h, n_pods, lanes, levels, mesh, dtype, use_kernel,
-                   interpret, reduce_strategy)
+        return levels
 
     # ------------------------------------------------------------- reporting
     def selection_table(self) -> list[dict]:

@@ -135,6 +135,35 @@ class DistOperator:
         return out
 
 
+def _assemble_operator(block_of, K: int, n_pods: int, lanes: int,
+                       strategy: str, row_part: Partition,
+                       col_part: Partition, graph: CommGraph,
+                       dtype) -> DistOperator:
+    """Shared tail: halo plan + per-device ELL lowering.
+
+    ``block_of(d)`` returns the CSR each device reads its rows from — the
+    whole matrix on the from-global path, device d's own row block on the
+    from-blocks path.  ``K`` is the global max row length.
+    """
+    D = n_pods * lanes
+    plan = build_halo_plan(graph, n_pods, lanes, strategy)
+    need_sorted = [np.sort(graph.need[d]) for d in range(D)]
+    rows_local = row_part.max_local_size
+    x_local = plan.local_n
+    cols = np.zeros((D, rows_local, K), dtype=np.int32)
+    vals = np.zeros((D, rows_local, K), dtype=np.float64)
+    for d in range(D):
+        cols[d], vals[d] = _ell_block(block_of(d), row_part, col_part, d,
+                                      need_sorted[d], rows_local, x_local, K)
+    psel = plan.pool_sel if plan.pool_sel is not None else np.zeros(
+        (D, 1), dtype=np.int32)
+    return DistOperator(strategy=strategy, plan=plan, row_part=row_part,
+                        col_part=col_part, rows_local=rows_local,
+                        ell_cols=cols, ell_vals=vals.astype(dtype),
+                        send_idx=plan.send_idx, recv_sel=plan.recv_sel,
+                        pool_sel=psel)
+
+
 def build_dist_operator(M: CSR, n_pods: int, lanes: int, strategy: str,
                         row_part: Partition | None = None,
                         col_part: Partition | None = None,
@@ -148,27 +177,38 @@ def build_dist_operator(M: CSR, n_pods: int, lanes: int, strategy: str,
     topo = Topology(n_nodes=n_pods, ppn=lanes)
     row_part = row_part or Partition.balanced(M.nrows, topo)
     col_part = col_part or Partition.balanced(M.ncols, topo)
-    D = topo.n_procs
     if graph is None:
         graph = rect_vector_graph(M, row_part, col_part)
-    plan = build_halo_plan(graph, n_pods, lanes, strategy)
-    need_sorted = [np.sort(graph.need[d]) for d in range(D)]
-
-    rows_local = row_part.max_local_size
-    x_local = plan.local_n
     K = int(np.diff(M.indptr).max(initial=1)) or 1
-    cols = np.zeros((D, rows_local, K), dtype=np.int32)
-    vals = np.zeros((D, rows_local, K), dtype=np.float64)
-    for d in range(D):
-        cols[d], vals[d] = _ell_block(M, row_part, col_part, d,
-                                      need_sorted[d], rows_local, x_local, K)
-    psel = plan.pool_sel if plan.pool_sel is not None else np.zeros(
-        (D, 1), dtype=np.int32)
-    return DistOperator(strategy=strategy, plan=plan, row_part=row_part,
-                        col_part=col_part, rows_local=rows_local,
-                        ell_cols=cols, ell_vals=vals.astype(dtype),
-                        send_idx=plan.send_idx, recv_sel=plan.recv_sel,
-                        pool_sel=psel)
+    return _assemble_operator(lambda d: M, K, n_pods, lanes, strategy,
+                              row_part, col_part, graph, dtype)
+
+
+def build_dist_operator_from_blocks(blocks: list[CSR], n_pods: int,
+                                    lanes: int, strategy: str, *,
+                                    row_part: Partition,
+                                    col_part: Partition,
+                                    graph: CommGraph | None = None,
+                                    dtype=jnp.float32) -> DistOperator:
+    """Device form of an operator that exists only as per-device row blocks.
+
+    ``blocks[d]`` is a *global-shape* CSR holding exactly device d's rows
+    (rows outside ``row_part.local_range(d)`` empty, global column ids) —
+    the :mod:`repro.amg.dist_setup` representation, where each level is born
+    partitioned and no global CSR is ever assembled.
+    """
+    D = n_pods * lanes
+    assert len(blocks) == D, (len(blocks), D)
+    if graph is None:
+        offp = []
+        for p in range(D):
+            rlo, rhi = row_part.local_range(p)
+            clo, chi = col_part.local_range(p)
+            offp.append(blocks[p].offproc_columns(clo, chi, rlo, rhi))
+        graph = CommGraph.from_offproc_columns(col_part, offp)
+    K = max(int(np.diff(b.indptr).max(initial=0)) for b in blocks) or 1
+    return _assemble_operator(lambda d: blocks[d], K, n_pods, lanes, strategy,
+                              row_part, col_part, graph, dtype)
 
 
 # --------------------------------------------------------------------------

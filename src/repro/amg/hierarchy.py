@@ -52,6 +52,70 @@ class Hierarchy:
         return "\n".join(rows)
 
 
+# --------------------------------------------------------------------------
+# Setup stages (Algorithm 1, one function per stage)
+#
+# Each stage is callable on its own so a distributed setup can run it
+# per-partition: strength is row-local (a row's pattern depends only on that
+# row, so it is exact on a partitioned row block); splitting and
+# interpolation need off-process values, which :mod:`repro.amg.dist_setup`
+# supplies through halo exchanges while calling the same underlying kernels.
+# --------------------------------------------------------------------------
+
+
+def strength_stage(A: CSR, solver: str = "rs", theta: float = 0.25) -> CSR:
+    """Strength-of-connection.  Row-local: exact on a partitioned row block."""
+    if solver == "rs":
+        return classical_strength(A, theta)
+    if solver == "sa":
+        return symmetric_strength(A, theta)
+    raise ValueError(f"unknown solver {solver!r}")
+
+
+def splitting_stage(S: CSR, solver: str = "rs", seed: int = 42,
+                    aggressive: bool = False) -> np.ndarray:
+    """CF splitting (rs → PMIS status) or aggregation (sa → aggregate ids).
+
+    Iterates on the global strength graph; the distributed setup re-runs the
+    same PMIS iteration per-partition with halo exchanges of the status and
+    weight vectors (:func:`repro.amg.dist_setup._dist_pmis`).
+    """
+    if solver == "rs":
+        return pmis(S, seed=seed, aggressive=aggressive)
+    if solver == "sa":
+        return mis2_aggregation(S, seed=seed)
+    raise ValueError(f"unknown solver {solver!r}")
+
+
+def splitting_stalled(split: np.ndarray, nrows: int, solver: str = "rs") -> bool:
+    """True when the splitting made no coarsening progress."""
+    if solver == "rs":
+        return int((split == 1).sum()) in (0, nrows)
+    return int(split.max()) + 1 >= nrows
+
+
+def interpolation_stage(A: CSR, S: CSR, split: np.ndarray, solver: str = "rs",
+                        prolongation_sweeps: int = 1) -> CSR:
+    """Build P from the splitting (direct interpolation / smoothed tentative)."""
+    if solver == "rs":
+        return direct_interpolation(A, S, split)
+    if solver == "sa":
+        T = tentative_prolongator(split)
+        return jacobi_smooth_prolongator(A, T, sweeps=prolongation_sweeps)
+    raise ValueError(f"unknown solver {solver!r}")
+
+
+def coarsen_level(A: CSR, solver: str = "rs", theta: float = 0.25,
+                  aggressive: bool = False, prolongation_sweeps: int = 1,
+                  seed: int = 42) -> CSR | None:
+    """strength → splitting → interpolation; ``None`` when coarsening stalls."""
+    S = strength_stage(A, solver, theta)
+    split = splitting_stage(S, solver, seed=seed, aggressive=aggressive)
+    if splitting_stalled(split, A.nrows, solver):
+        return None
+    return interpolation_stage(A, S, split, solver, prolongation_sweeps)
+
+
 def setup(A: CSR, solver: str = "rs", theta: float = 0.25,
           max_coarse: int = 100, max_levels: int = 25,
           aggressive: bool = False, prolongation_sweeps: int = 1,
@@ -63,21 +127,10 @@ def setup(A: CSR, solver: str = "rs", theta: float = 0.25,
     while levels[l].A.nrows > max_coarse and l + 1 < max_levels:
         t0 = time.perf_counter()
         Al = levels[l].A
-        if solver == "rs":
-            S = classical_strength(Al, theta)                    # strength
-            status = pmis(S, seed=seed + l, aggressive=aggressive)  # splitting
-            if (status == 1).sum() in (0, Al.nrows):
-                break  # coarsening stalled
-            P = direct_interpolation(Al, S, status)              # interpolation
-        elif solver == "sa":
-            S = symmetric_strength(Al, theta)
-            agg = mis2_aggregation(S, seed=seed + l)             # splitting
-            if int(agg.max()) + 1 >= Al.nrows:
-                break
-            T = tentative_prolongator(agg)                       # interpolation
-            P = jacobi_smooth_prolongator(Al, T, sweeps=prolongation_sweeps)
-        else:
-            raise ValueError(f"unknown solver {solver!r}")
+        P = coarsen_level(Al, solver, theta, aggressive,
+                          prolongation_sweeps, seed + l)
+        if P is None:
+            break  # coarsening stalled
         R = P.T
         AP = Al.spgemm(P)                                        # Galerkin 1/2
         Ac = R.spgemm(AP)                                        # Galerkin 2/2

@@ -14,21 +14,34 @@ import numpy as np
 from .csr import CSR
 
 
-def direct_interpolation(A: CSR, S: CSR, status: np.ndarray) -> CSR:
+def direct_interpolation(A: CSR, S: CSR, status: np.ndarray, *,
+                         col_status: np.ndarray | None = None,
+                         cmap: np.ndarray | None = None,
+                         nc: int | None = None) -> CSR:
     """Classical direct interpolation.
 
     C-point rows are identity; F-point i interpolates from its strong
     C-neighbors j with  w_ij = -(Σ_{k≠i} a_ik / Σ_{j∈C_i^s} a_ij)·a_ij/a_ii.
+
+    The keyword arguments support partitioned (row-block) callers, where row
+    knowledge and column knowledge come from different exchanges: ``status``
+    is trusted for the block's *rows* (C rows become identity rows), while
+    ``col_status`` / ``cmap`` must be valid at every *column* referenced by
+    ``S`` (local + halo) and ``nc`` is the global coarse size.  Defaults
+    reproduce the serial single-block behavior exactly.
     """
     n = A.nrows
     is_c = status == 1
-    cmap = np.cumsum(is_c) - 1  # fine -> coarse index
-    nc = int(is_c.sum())
+    col_c = is_c if col_status is None else col_status == 1
+    if cmap is None:
+        cmap = np.cumsum(col_c) - 1  # fine -> coarse index
+    if nc is None:
+        nc = int(col_c.sum())
     r = A.rows_expanded()
 
     # strong C columns per row (pattern from S, values from A)
     srow = S.rows_expanded()
-    strongC = is_c[S.indices]
+    strongC = col_c[S.indices]
     # A values at the strong-C positions: build lookup from (row,col) of A
     # via merge: both are row-sorted
     Akey = r * n + A.indices

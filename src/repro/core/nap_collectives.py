@@ -16,10 +16,17 @@ domain (intra-pod ICI).  All functions are written for use *inside*
   host-side from a :class:`~repro.core.comm_graph.CommGraph` exactly the way
   an MPI AMG code builds its communicators, then executed as static-shape
   collectives.
+* :class:`MatrixHaloPlan` / :func:`matrix_halo_exchange` — the paper's
+  *matrix* communication (setup-phase SpGEMMs): whole CSR rows of B move
+  under the same §3 schedules.  Rows are ragged and the setup phase runs
+  once per hierarchy build, so the exchange executes host-side and
+  rank-faithfully (phase by phase, message by message) rather than as
+  static-shape device collectives.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +34,7 @@ import numpy as np
 
 from .comm_graph import CommGraph
 from .compat import axis_size as _axis_size
+from .schedules import Schedule, build as build_schedule
 from .topology import Partition, Topology
 
 # --------------------------------------------------------------------------
@@ -105,6 +113,113 @@ def hier_all_to_all(x: jnp.ndarray, slow_axis: str, fast_axis: str,
     x = jax.lax.all_to_all(x, slow_axis, split_axis=0, concat_axis=0, tiled=False)
     # [src_slow, src_fast, ...] for traffic destined to this (pod, lane).
     return x.reshape((total,) + x.shape[2:])
+
+
+# --------------------------------------------------------------------------
+# Matrix-row halo exchange for distributed SpGEMM (the paper's matrix
+# communication: "retains the same communication pattern as vectors, but
+# requires entire rows")
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MatrixHaloPlan:
+    """Host-side plan for exchanging off-process CSR **rows**.
+
+    Built from a :class:`~repro.core.comm_graph.CommGraph` whose indices are
+    rows of B and whose weights are per-row byte sizes (see
+    :func:`repro.amg.dist.matrix_comm_graph`: header + entries).  The
+    ``schedule`` is the §3 message list for the chosen strategy — the same
+    object the max-rate models price, so what :func:`repro.core.selector.
+    select` selects is exactly what executes.
+    """
+
+    strategy: str
+    graph: CommGraph
+    schedule: Schedule
+
+    @property
+    def n_ranks(self) -> int:
+        return self.graph.topo.n_procs
+
+
+def build_matrix_halo_plan(graph: CommGraph, strategy: str) -> MatrixHaloPlan:
+    return MatrixHaloPlan(strategy, graph, build_schedule(strategy, graph))
+
+
+@dataclasses.dataclass
+class MatrixExchangeResult:
+    """Measured outcome of one matrix-row exchange.
+
+    ``halo[q]`` maps each global B-row index rank ``q`` needed to the payload
+    the provider returned for it; the message/byte counters are the measured
+    counterparts of the modeled :class:`~repro.core.schedules.ScheduleStats`.
+    """
+
+    halo: list[dict[int, object]]
+    inter_msgs: int
+    inter_bytes: float
+    intra_msgs: int
+    intra_bytes: float
+    seconds: float
+
+
+def matrix_halo_exchange(plan: MatrixHaloPlan, get_row) -> MatrixExchangeResult:
+    """Execute the plan rank-faithfully on the host.
+
+    ``get_row(owner_rank, global_row) -> payload`` supplies an owned row
+    (payload is opaque — e.g. a ``(cols, vals)`` pair).  Intermediate ranks
+    (NAP gather/redist hops) forward rows they do not themselves need, as in
+    :mod:`repro.core.simulator`; messages within a phase are concurrent and
+    read from pre-phase stores.
+    """
+    t0 = time.perf_counter()
+    g = plan.graph
+    topo = g.topo
+    part = g.partition
+    D = topo.n_procs
+    owner_lo = [part.local_range(p)[0] for p in range(D)]
+    owner_hi = [part.local_range(p)[1] for p in range(D)]
+    store: list[dict[int, object]] = [dict() for _ in range(D)]
+    inter_msgs = intra_msgs = 0
+    inter_bytes = intra_bytes = 0.0
+
+    def serve(src: int, i: int):
+        if owner_lo[src] <= i < owner_hi[src]:
+            return get_row(src, i)
+        try:
+            return store[src][i]
+        except KeyError:
+            raise AssertionError(
+                f"rank {src} asked to send row {i} it does not hold "
+                f"(strategy {plan.strategy})") from None
+
+    for phase in plan.schedule.phases:
+        staged: list[tuple[int, dict[int, object]]] = []
+        for m in phase.messages:
+            payload = {int(i): serve(m.src, int(i)) for i in m.indices}
+            staged.append((m.dst, payload))
+            b = g.bytes_of(m.indices)
+            if topo.on_same_node(m.src, m.dst):
+                intra_msgs += 1
+                intra_bytes += b
+            else:
+                inter_msgs += 1
+                inter_bytes += b
+        for dst, payload in staged:
+            store[dst].update(payload)
+
+    halo: list[dict[int, object]] = []
+    for q in range(D):
+        rows = {}
+        for i in map(int, g.need[q]):
+            if i not in store[q]:
+                raise AssertionError(
+                    f"{plan.strategy}: rank {q} never received row {i}")
+            rows[i] = store[q][i]
+        halo.append(rows)
+    return MatrixExchangeResult(halo, inter_msgs, inter_bytes, intra_msgs,
+                                intra_bytes, time.perf_counter() - t0)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,109 @@
+"""Multi-device distributed setup-phase validation — run as a SUBPROCESS by
+test_dist_setup.py (device count must be set before jax init).
+
+Asserts that ``AMGConfig(setup_backend="dist", backend="dist")`` produces a
+bound solver whose hierarchy was never assembled on the host (levels born
+partitioned), that the lowered levels match a host-setup lowering to 1e-12
+(sparsity via ELL column maps, values, coarse pseudo-inverse), that the
+setup-phase SpGEMM strategy selections land in the selection table, and
+that the resulting dist PCG residual history matches the host-setup dist
+path at the 1e-7 parity bar.  Prints "OK <check>" per passing check.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)   # fp64 parity checks
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.amg import AMGConfig, AMGSolver, pcg, setup  # noqa: E402
+from repro.amg.dist_solve import DistHierarchy  # noqa: E402
+from repro.amg.problems import laplace_3d  # noqa: E402
+from repro.core import BLUE_WATERS  # noqa: E402
+
+N_PODS, LANES = 2, 4
+
+
+def main():
+    A = laplace_3d(8)
+    b = A.matvec(np.ones(A.nrows))
+    h = setup(A, solver="rs")
+
+    cfg = AMGConfig(setup_backend="dist", backend="dist", n_pods=N_PODS,
+                    lanes=LANES, machine="blue_waters", dtype="float64")
+    bound = AMGSolver(cfg).setup(A)
+    assert bound.hierarchy is None, "levels must be born partitioned"
+    assert bound.n == A.nrows
+    dh = bound.dist_hierarchy
+    assert dh.h is None
+    print("OK born_partitioned")
+
+    # every coarsening level recorded both Galerkin SpGEMM selections
+    sel = {(r["level"], r["op"]): r for r in dh.selection_table()}
+    for l in range(len(dh.levels) - 1):
+        for op in ("spgemm_AP", "spgemm_PtAP"):
+            row = sel[(l, op)]
+            assert row["strategy"] in ("standard", "nap2", "nap3")
+            assert row["modeled"][row["strategy"]] == \
+                min(row["modeled"].values())
+    assert dh.setup_records, "measured exchange records missing"
+    for rec in dh.setup_records:
+        assert rec.seconds >= 0 and rec.inter_msgs + rec.intra_msgs >= 0
+    print("OK setup_selection")
+
+    # lowered-level parity vs the host-setup path: identical ELL sparsity
+    # (column maps), values to 1e-12, identical strategies, same coarse pinv
+    dh_host = DistHierarchy.build(h, N_PODS, LANES, params=BLUE_WATERS,
+                                  dtype=jnp.float64)
+    assert len(dh.levels) == len(dh_host.levels)
+    for l, (a, c) in enumerate(zip(dh.levels, dh_host.levels)):
+        pairs = [(a.A, c.A)] + ([(a.P, c.P), (a.R, c.R)]
+                                if a.P is not None else [])
+        for x, y in pairs:
+            assert x.strategy == y.strategy, l
+            assert np.array_equal(x.ell_cols, y.ell_cols), l
+            assert np.abs(x.ell_vals - y.ell_vals).max() <= 1e-12, l
+        assert np.abs(a.dinv - c.dinv).max() <= 1e-12, l
+        if a.coarse_inv is not None:
+            assert np.abs(a.coarse_inv - c.coarse_inv).max() <= 1e-12, l
+    print("OK level_parity")
+
+    # solve-phase parity: dist PCG from the partitioned setup matches the
+    # host-setup dist path at the existing 1e-7 bar
+    res_d = bound.pcg(b, tol=1e-10, maxiter=30)
+    res_ref = pcg(h, b, tol=1e-10, maxiter=30, backend="dist", dist=dh_host)
+    assert res_d.converged
+    n = min(len(res_d.residuals), len(res_ref.residuals))
+    r0 = res_ref.residuals[0]
+    diff = max(abs(x - y) / r0 for x, y in
+               zip(res_d.residuals[:n], res_ref.residuals[:n]))
+    assert diff < 1e-7, diff
+    print("OK pcg_parity")
+
+    # session cache: same (matrix, config) → same bound solver; a config
+    # differing only in solve knobs shares the cached DistHierarchy; one
+    # differing only in lowering knobs (dtype) re-lowers but must NOT re-run
+    # the partitioned setup loop (two-tier cache)
+    assert AMGSolver(cfg).setup(A) is bound
+    bound2 = AMGSolver(cfg.replace(maxiter=7)).setup(A)
+    assert bound2 is not bound and bound2.dist_hierarchy is dh
+    import repro.amg.dist_setup as ds_mod
+    calls = []
+    orig = ds_mod.dist_setup_partitioned
+    ds_mod.dist_setup_partitioned = \
+        lambda *a, **k: calls.append(1) or orig(*a, **k)
+    bound32 = AMGSolver(cfg.replace(dtype="float32")).setup(A)
+    ds_mod.dist_setup_partitioned = orig
+    assert bound32.dist_hierarchy is not dh
+    assert not calls, "dtype-only change must reuse the partitioned setup"
+    print("OK session_cache")
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

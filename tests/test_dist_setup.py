@@ -1,0 +1,292 @@
+"""Distributed setup-phase tests.
+
+Host-side: matrix comm-graph semantics, analyze_hierarchy vs select
+consistency for the setup SpGEMMs, phase_costs aggregation with partial
+strategy sets, the rank-faithful matrix-row halo exchange for all three
+schedules, and exact parity of the partitioned setup loop against
+``hierarchy.setup``.  The full partitioned-setup → DistHierarchy → PCG
+session runs on an 8-device mesh in a subprocess
+(``dist_setup_script.py``).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.amg import AMGConfig, setup
+from repro.amg.dist import (MATRIX_ENTRY, MATRIX_ROW_HEADER, OpComm,
+                            analyze_hierarchy, matrix_comm_graph,
+                            phase_costs, row_partition)
+from repro.amg.dist_setup import (BlockMatrix, dist_setup_partitioned,
+                                  split_rows, transpose_blocks)
+from repro.amg.problems import laplace_3d, laplace_3d_7pt
+from repro.core import BLUE_WATERS, CommGraph, Partition, Topology, select
+from repro.core.nap_collectives import (build_matrix_halo_plan,
+                                        matrix_halo_exchange)
+
+SCRIPT = pathlib.Path(__file__).parent / "dist_setup_script.py"
+EXPECTED = ["OK born_partitioned", "OK setup_selection", "OK level_parity",
+            "OK pcg_parity", "OK session_cache", "ALL_OK"]
+
+
+def _assemble(bm: BlockMatrix):
+    acc = bm.blocks[0]
+    for b in bm.blocks[1:]:
+        acc = acc.add(b)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# matrix_comm_graph semantics + selection consistency (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_matrix_comm_graph_semantics():
+    """need[p] = rows of B for rank p's off-process A columns; weights are
+    whole-row byte sizes of B."""
+    A = laplace_3d_7pt(4)
+    h = setup(A, solver="rs", max_coarse=10)
+    P = h.levels[0].P
+    topo = Topology(n_nodes=2, ppn=2)
+    part = row_partition(A, topo)
+    g = matrix_comm_graph(A, P, part)
+    assert g.partition is part                    # B rows follow A's part
+    np.testing.assert_allclose(
+        g.weights, np.diff(P.indptr) * MATRIX_ENTRY + MATRIX_ROW_HEADER)
+    for p in range(topo.n_procs):
+        lo, hi = part.local_range(p)
+        sl = slice(int(A.indptr[lo]), int(A.indptr[hi]))
+        cols = A.indices[sl]
+        expect = np.unique(cols[(cols < lo) | (cols >= hi)])
+        np.testing.assert_array_equal(g.need[p], expect)
+
+
+def test_matrix_comm_graph_rectangular_b_part():
+    """Pᵀ·(AP): A=R on the coarse partition, B=AP rows on the fine one."""
+    A = laplace_3d(6)
+    h = setup(A, solver="rs", max_coarse=30)
+    R, AP = h.levels[0].R, h.levels[0].AP
+    topo = Topology(n_nodes=2, ppn=2)
+    cpart = Partition.balanced(R.nrows, topo)
+    fpart = Partition.balanced(AP.nrows, topo)
+    g = matrix_comm_graph(R, AP, cpart, b_part=fpart)
+    assert g.partition is fpart
+    assert g.weights.size == AP.nrows
+    for p in range(topo.n_procs):
+        rlo, rhi = cpart.local_range(p)
+        blo, bhi = fpart.local_range(p)
+        np.testing.assert_array_equal(
+            g.need[p], R.offproc_columns(blo, bhi, rlo, rhi))
+
+
+def test_analyze_hierarchy_spgemm_matches_select():
+    """analyze_hierarchy's spgemm_AP/spgemm_PtAP rows reproduce a by-hand
+    matrix_comm_graph + select on the same level operators."""
+    A = laplace_3d(6)
+    h = setup(A, solver="rs", max_coarse=30)
+    topo = Topology(n_nodes=4, ppn=4)
+    ops = {(o.level, o.op): o for o in
+           analyze_hierarchy(h, topo, BLUE_WATERS)}
+    for l, lv in enumerate(h.levels):
+        if lv.P is None:
+            continue
+        part = row_partition(lv.A, topo)
+        cpart = Partition.balanced(lv.P.ncols, topo)
+        byhand = {
+            "spgemm_AP": matrix_comm_graph(lv.A, lv.P, part),
+            "spgemm_PtAP": matrix_comm_graph(lv.R, lv.AP, cpart,
+                                             b_part=part),
+        }
+        for op, g in byhand.items():
+            sel = select(g, BLUE_WATERS)
+            got = ops[(l, op)].selection
+            assert got.strategy == sel.strategy
+            assert got.times == pytest.approx(sel.times)
+
+
+def test_phase_costs_skips_missing_times():
+    """An op selected over a strategy subset must not poison the per-level
+    table with inf (satellite fix)."""
+    A = laplace_3d(6)
+    h = setup(A, solver="rs", max_coarse=30)
+    topo = Topology(n_nodes=2, ppn=2)
+    part = row_partition(h.levels[0].A, topo)
+    g = matrix_comm_graph(h.levels[0].A, h.levels[0].P, part)
+    partial = OpComm(0, "spgemm_AP",
+                     g, select(g, BLUE_WATERS, ("standard", "nap2")))
+    full = OpComm(0, "spgemm_PtAP", g, select(g, BLUE_WATERS))
+    costs = phase_costs([partial, full], 1)["setup"][0]
+    for v in costs.values():
+        assert np.isfinite(v)
+    # the missing nap3 entry contributes nothing from the partial op
+    assert costs["nap3"] == pytest.approx(full.selection.times["nap3"])
+    assert costs["standard"] == pytest.approx(
+        partial.selection.times["standard"] + full.selection.times["standard"])
+
+
+# --------------------------------------------------------------------------
+# Matrix-row halo exchange (MatrixHaloPlan)
+# --------------------------------------------------------------------------
+
+
+def test_matrix_halo_exchange_all_strategies():
+    """Every schedule delivers exactly the needed B rows with exact values;
+    node-aware schedules cross the network with no more bytes (de-dup) and
+    no more messages than standard."""
+    A = laplace_3d(6)
+    h = setup(A, solver="rs", max_coarse=30)
+    P = h.levels[0].P
+    topo = Topology(n_nodes=2, ppn=4)
+    part = row_partition(A, topo)
+    g = matrix_comm_graph(A, P, part)
+    Pb = split_rows(P, part)
+
+    def get_row(rank, i):
+        blk = Pb.blocks[rank]
+        sl = slice(int(blk.indptr[i]), int(blk.indptr[i + 1]))
+        return blk.indices[sl], blk.data[sl]
+
+    measured = {}
+    for strat in ("standard", "nap2", "nap3"):
+        plan = build_matrix_halo_plan(g, strat)
+        res = matrix_halo_exchange(plan, get_row)
+        for q in range(topo.n_procs):
+            assert set(res.halo[q]) == set(map(int, g.need[q]))
+            for i, (cols, vals) in res.halo[q].items():
+                sl = slice(int(P.indptr[i]), int(P.indptr[i + 1]))
+                np.testing.assert_array_equal(cols, P.indices[sl])
+                np.testing.assert_array_equal(vals, P.data[sl])
+        measured[strat] = res
+    for strat in ("nap2", "nap3"):
+        assert measured[strat].inter_bytes <= measured["standard"].inter_bytes
+        assert measured[strat].inter_msgs <= measured["standard"].inter_msgs
+    assert measured["standard"].seconds >= 0
+
+
+# --------------------------------------------------------------------------
+# Partitioned setup loop: exact parity with hierarchy.setup
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,npods,lanes,aggressive", [
+    (8, 2, 4, False),
+    (6, 2, 2, True),
+])
+def test_dist_setup_partitioned_matches_host(n, npods, lanes, aggressive):
+    A = laplace_3d(n)
+    h = setup(A, solver="rs", aggressive=aggressive)
+    plv, recs = dist_setup_partitioned(A, npods, lanes, params=BLUE_WATERS,
+                                       aggressive=aggressive)
+    assert len(plv) == h.n_levels
+    for l, (lv, pl) in enumerate(zip(h.levels, plv)):
+        for name in ("A", "P", "R", "AP"):
+            ref, got = getattr(lv, name), getattr(pl, name)
+            assert (ref is None) == (got is None), (l, name)
+            if ref is None:
+                continue
+            # each rank's block holds only its own rows — never the level
+            assert all(b.nnz < ref.nnz for b in got.blocks)
+            asm = _assemble(got)
+            assert asm.shape == ref.shape
+            np.testing.assert_array_equal(asm.indptr, ref.indptr)
+            np.testing.assert_array_equal(asm.indices, ref.indices)
+            np.testing.assert_allclose(asm.data, ref.data, atol=1e-12)
+    ops = {(r.level, r.op) for r in recs}
+    for l in range(len(plv) - 1):
+        assert (l, "spgemm_AP") in ops and (l, "spgemm_PtAP") in ops
+    for r in recs:
+        assert r.strategy in ("standard", "nap2", "nap3")
+        assert r.modeled[r.strategy] == min(r.modeled.values())
+
+
+def test_transpose_blocks_matches_host_transpose():
+    A = laplace_3d(6)
+    h = setup(A, solver="rs", max_coarse=30)
+    P = h.levels[0].P
+    topo = Topology(n_nodes=2, ppn=2)
+    fpart = Partition.balanced(P.nrows, topo)
+    cpart = Partition.balanced(P.ncols, topo)
+    Rb = transpose_blocks(split_rows(P, fpart), cpart)
+    R = P.T
+    asm = _assemble(Rb)
+    np.testing.assert_array_equal(asm.indptr, R.indptr)
+    np.testing.assert_array_equal(asm.indices, R.indices)
+    np.testing.assert_allclose(asm.data, R.data, atol=1e-15)
+
+
+def test_dist_setup_rejects_sa():
+    with pytest.raises(ValueError, match="solver='rs'"):
+        dist_setup_partitioned(laplace_3d(4), 2, 2, solver="sa")
+
+
+# --------------------------------------------------------------------------
+# Config knob
+# --------------------------------------------------------------------------
+
+
+def test_setup_backend_config_validation_and_roundtrip():
+    cfg = AMGConfig(setup_backend="dist", backend="dist", n_pods=2, lanes=4)
+    d = cfg.to_dict()
+    assert d["setup_backend"] == "dist"
+    assert AMGConfig.from_dict(d) == cfg
+    assert cfg.setup_kwargs()["solver"] == "rs"
+    assert cfg.dist_build_kwargs()["n_pods"] == 2
+    with pytest.raises(ValueError, match="backend"):
+        AMGConfig(setup_backend="dist")            # host solve backend
+    with pytest.raises(ValueError, match="setup_backend"):
+        AMGConfig(setup_backend="bogus")
+    with pytest.raises(ValueError, match="solver='rs'"):
+        AMGConfig(setup_backend="dist", backend="dist", solver="sa")
+    # the function entrypoint lives on the submodule (NOT re-exported from
+    # repro.amg — it would collide with the submodule name there)
+    import repro.amg
+    import repro.amg.dist_setup
+    assert callable(repro.amg.dist_setup.dist_setup)
+    with pytest.raises(AttributeError):
+        repro.amg.no_such_symbol
+
+
+# --------------------------------------------------------------------------
+# Full session on an 8-device mesh (subprocess)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multidevice_dist_setup_subprocess():
+    env = dict(os.environ)
+    root = str(pathlib.Path(__file__).parents[1] / "src")
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(SCRIPT)], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    for marker in EXPECTED:
+        assert marker in out.stdout, f"missing {marker!r} in:\n{out.stdout}"
+
+
+@pytest.mark.slow
+def test_benchmark_smoke_mode(tmp_path):
+    """benchmarks/dist_setup.py --smoke emits host-vs-dist timings for ≥3
+    sizes plus per-level modeled-vs-measured strategy rows, and writes
+    BENCH_dist_setup.json."""
+    env = dict(os.environ)
+    root = pathlib.Path(__file__).parents[1]
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    out_json = tmp_path / "BENCH_dist_setup.json"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.dist_setup", "--smoke",
+         "--out", str(out_json)],
+        capture_output=True, text=True, env=env, cwd=root, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    import json
+    data = json.loads(out_json.read_text())
+    assert data["benchmark"] == "dist_setup"
+    names = [r["name"] for r in data["rows"]]
+    assert sum(n.startswith("host_setup_n") for n in names) >= 3
+    assert sum(n.startswith("dist_setup_n") for n in names) >= 3
+    spg = [r for r in data["rows"] if "_spgemm_" in r["name"]]
+    assert spg, names
+    for r in spg:
+        assert "strategy=" in r["derived"] and "modeled_us=" in r["derived"]
