@@ -15,9 +15,7 @@ def rows(n=16, n_nodes=16, ppn=16):
     topo = Topology(n_nodes=n_nodes, ppn=ppn)
     out = []
     for solver in ("rs", "sa"):
-        t0 = time.perf_counter()
         h = setup(A, solver=solver)
-        setup_s = time.perf_counter() - t0
         ops = analyze_hierarchy(h, topo, BLUE_WATERS)
         costs = phase_costs(ops, h.n_levels)
         for l in range(h.n_levels):

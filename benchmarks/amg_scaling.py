@@ -13,7 +13,7 @@ import numpy as np
 from repro.amg import setup, vcycle
 from repro.amg.dist import analyze_hierarchy
 from repro.amg.problems import grad_div_3d, laplace_3d
-from repro.core import BLUE_WATERS, QUARTZ, Topology
+from repro.core import BLUE_WATERS, Topology
 
 SOLVE_OPS = ("spmv_A", "restrict", "interp")
 SETUP_OPS = ("spgemm_AP", "spgemm_PtAP")
@@ -43,7 +43,7 @@ def _measure_local(A, h):
 def rows(system="graddiv", machine=BLUE_WATERS, weak=False):
     out = []
     A = grad_div_3d(10) if system == "graddiv" else laplace_3d(18)
-    h = setup_hier = setup(A, solver="rs")
+    h = setup(A, solver="rs")
     setup_local, solve_local = _measure_local(A, h)
     procs_list = (256, 512, 1024, 2048, 4096)
     for p in procs_list:

@@ -1,9 +1,11 @@
-"""Solve-phase benchmark: the device-resident fused V-cycle, standard vs
+"""Solve-phase benchmark: the device-resident fused cycle, standard vs
 NAP-2 vs NAP-3 vs model-selected per-level strategies (paper Figs. 16/17's
-solve-phase claim, executed rather than simulated), plus a weak-scaling
-sweep over ≥3 problem sizes (``weak_rows``) and a cached-vs-cold
-``AMGSolver`` session comparison (``session_rows``) showing the per-call
-rebuild cost the session API eliminates.
+solve-phase claim, executed rather than simulated), plus a cycle-shape ×
+smoother sweep with per-cycle coarse-level message counts
+(``cycle_smoother_rows`` — the rows the CI regression gate vets), a
+weak-scaling sweep over ≥3 problem sizes (``weak_rows``) and a
+cached-vs-cold ``AMGSolver`` session comparison (``session_rows``) showing
+the per-call rebuild cost the session API eliminates.
 
 Emits the ``name,us_per_call,derived`` rows used by :mod:`benchmarks.run`,
 and — when run standalone — a ``BENCH_dist_solve.json`` file with the same
@@ -70,6 +72,55 @@ def rows(smoke: bool | None = None, cycles: int | None = None):
                 modeled = r["modeled"].get(r["strategy"], 0.0)
                 out.append((f"dist_solve_auto_L{r['level']}_{r['op']}",
                             modeled * 1e6, r["strategy"]))
+    return out
+
+
+def cycle_smoother_rows(smoke: bool | None = None):
+    """Cycle-shape × smoother sweep through the fused device program.
+
+    One row per (cycle, smoother) pair on a ≥3-level hierarchy (so W/F
+    actually revisit coarse levels): iteration count to tol, convergence
+    factor, µs/cycle, and the *modeled per-cycle message counts* split into
+    total and coarse-level (ℓ ≥ 1) — the quantity W/F-cycles multiply and
+    where the paper's NAP strategies aggregate small inter-node messages.
+    ``iters``/``conv`` feed the CI regression gate (scripts/check_bench.py).
+    """
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+    import numpy as np
+
+    from repro.amg import SolveOptions, setup, solve
+    from repro.amg.dist_solve import DistHierarchy, cycle_comm_stats
+    from repro.amg.problems import laplace_3d
+    from repro.amg.solve import CYCLES, SMOOTHERS
+    from repro.core import BLUE_WATERS
+
+    n = 8 if smoke else 12
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    A = laplace_3d(n)
+    h = setup(A, solver="rs", max_coarse=30)   # deepen: W/F need ≥3 levels
+    b = A.matvec(np.ones(A.nrows))
+    dh = DistHierarchy.build(h, n_pods, lanes, params=BLUE_WATERS)
+    out = []
+    for cycle in CYCLES:
+        for sm in SMOOTHERS:
+            opts = SolveOptions(cycle=cycle, smoother=sm)
+            solve(h, b, maxiter=1, tol=0.0, opts=opts, backend="dist",
+                  dist=dh)                     # compile
+            t0 = time.perf_counter()
+            res = solve(h, b, tol=1e-6, maxiter=40, opts=opts,
+                        backend="dist", dist=dh)
+            dt = time.perf_counter() - t0
+            st = cycle_comm_stats(dh, opts)
+            out.append((
+                f"dist_cycle_{cycle}_{sm}",
+                dt / max(res.iterations, 1) * 1e6,
+                f"n={A.nrows};mesh={n_pods}x{lanes};levels={h.n_levels};"
+                f"iters={res.iterations};conv={res.avg_conv_factor:.3f};"
+                f"inter_msgs={st['inter_msgs']};"
+                f"coarse_inter_msgs={st['coarse_inter_msgs']};"
+                f"coarse_intra_msgs={st['coarse_intra_msgs']}"))
     return out
 
 
@@ -150,8 +201,8 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
-    data = (rows(smoke=args.smoke) + weak_rows(smoke=args.smoke)
-            + session_rows(smoke=args.smoke))
+    data = (rows(smoke=args.smoke) + cycle_smoother_rows(smoke=args.smoke)
+            + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke))
     print("name,us_per_call,derived")
     for name, us, derived in data:
         print(f"{name},{us:.2f},{derived}")

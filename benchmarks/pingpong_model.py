@@ -1,7 +1,5 @@
 """Fig. 8/9: single-message cost by locality, and inter-node max-rate vs
 active process count."""
-import numpy as np
-
 from repro.core.perf_model import (BLUE_WATERS, maxrate_internode_time,
                                    single_message_time)
 

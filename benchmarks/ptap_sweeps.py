@@ -1,8 +1,6 @@
 """Fig. 21: node-aware speedup of the Galerkin Pᵀ·(AP) communication for a
 2D rotated anisotropic diffusion system, with 1 vs 2 Jacobi prolongation-
 smoothing sweeps.  Denser P (2 sweeps) → more matrix comm → larger NAP wins."""
-import numpy as np
-
 from repro.amg import setup
 from repro.amg.dist import matrix_comm_graph, row_partition
 from repro.amg.problems import rotated_anisotropic_2d

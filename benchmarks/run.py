@@ -18,6 +18,7 @@ MODULES = [
                                             weak=True)),
     ("fig21", lambda: ptap_sweeps.rows()),
     ("dist_solve", lambda: dist_solve.rows(smoke=True)),
+    ("dist_solve_cycles", lambda: dist_solve.cycle_smoother_rows(smoke=True)),
     ("dist_solve_weak", lambda: dist_solve.weak_rows(smoke=True)),
     ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
     ("dist_setup", lambda: dist_setup.rows(smoke=True)),

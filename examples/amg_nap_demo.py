@@ -19,6 +19,14 @@ level), then the ``setup_backend="dist"`` config knob runs the whole
 session — partitioned setup straight into the device-resident solve, no
 host assembly in between — and checks PCG parity against part 2's path.
 
+Part 4 (cycle shapes × smoothers): the solve-phase breadth table.  Every
+``SolveOptions(cycle=V|W|F, smoother=...)`` pair runs as its own fused
+device program on the same lowered hierarchy; the table prints iterations
+to tolerance, convergence factor, and the modeled per-cycle coarse-level
+message counts — W/F-cycles multiply exactly the small coarse-level
+messages the NAP strategies aggregate, which is what makes the cycle shape
+a communication-strategy scenario and not just a numerics knob.
+
     PYTHONPATH=src python examples/amg_nap_demo.py
 """
 import os
@@ -36,7 +44,6 @@ from repro.amg.dist import row_partition, vector_comm_graph
 from repro.amg.problems import dpg_laplace_3d, grad_div_3d, laplace_3d
 from repro.core import BLUE_WATERS, Topology, build
 from repro.core.perf_model import model_time
-from repro.core.schedules import ScheduleStats
 from repro.core.simulator import verify
 
 
@@ -126,7 +133,7 @@ def dist_setup_demo(n_pods: int = 2, lanes: int = 4):
               f"{r.modeled[r.strategy] * 1e6:>10.1f} {r.inter_msgs:>10} "
               f"{r.inter_bytes:>11.0f} {r.n_halo_rows:>9}")
     print(f"partitioned levels: {len(plevels)} (born partitioned — no "
-          f"global CSR assembled past the fine grid)")
+          "global CSR assembled past the fine grid)")
 
     # 3b: the setup_backend="dist" knob — one session from partitioned
     # setup to device-resident multi-RHS serving
@@ -150,10 +157,41 @@ def dist_setup_demo(n_pods: int = 2, lanes: int = 4):
     print("dist setup == host setup to 1e-4 relative: OK")
 
 
+def cycle_smoother_demo(n_pods: int = 2, lanes: int = 4):
+    from repro.amg import AMGConfig, AMGSolver, SolveOptions
+    from repro.amg.dist_solve import cycle_comm_stats
+    from repro.amg.solve import CYCLES, SMOOTHERS
+
+    A = laplace_3d(8)
+    b = A.matvec(np.ones(A.nrows))
+    print(f"\n=== cycle shapes × smoothers: {A.nrows} dofs on a "
+          f"{n_pods}x{lanes} mesh ===")
+    base = AMGConfig(backend="dist", n_pods=n_pods, lanes=lanes,
+                     machine="blue_waters", max_coarse=30, tol=1e-6)
+    print(f"{'cycle':>5} {'smoother':>13} {'iters':>5} {'conv':>6} "
+          f"{'coarse inter-msgs/cycle':>23} {'total inter-msgs':>16}")
+    for cycle in CYCLES:
+        for sm in SMOOTHERS:
+            opts = SolveOptions(cycle=cycle, smoother=sm,
+                                smoother_parts=n_pods * lanes)
+            # solve-knob-only change: every pair below shares ONE cached
+            # hierarchy + lowering, only the compiled program differs
+            bound = AMGSolver(base.replace(opts=opts)).setup(A)
+            res = bound.solve(b, maxiter=40)
+            st = cycle_comm_stats(bound.dist_hierarchy, opts)
+            print(f"{cycle:>5} {sm:>13} {res.iterations:>5} "
+                  f"{res.avg_conv_factor:>6.3f} "
+                  f"{st['coarse_inter_msgs']:>23} {st['inter_msgs']:>16}")
+            assert res.converged, (cycle, sm)
+    print("every (cycle, smoother) pair converged through its own fused "
+          "device program: OK")
+
+
 def main():
     simulator_study()
     dist_solve_demo()
     dist_setup_demo()
+    cycle_smoother_demo()
 
 
 if __name__ == "__main__":

@@ -16,9 +16,14 @@ node-aware setup — the host ``Hierarchy``, the lowered ``DistHierarchy``
 from the paper's performance models + halo plans), and its compiled fused
 V-cycle/PCG shard_map programs — is built once and reused across solves.
 Backends plug in through :func:`~repro.amg.api.register_backend`
-(``"host"`` = reference numpy, ``"dist"`` = device-resident fused V-cycle);
+(``"host"`` = reference numpy, ``"dist"`` = device-resident fused cycle);
 :class:`~repro.amg.api.SolverEngine` serves batched ``(matrix_id, b)``
-request streams on top of the same cache.
+request streams on top of the same cache.  The cycle shape and smoother
+are ``SolveOptions`` knobs (``cycle="V"|"W"|"F"``, ``smoother="jacobi" |
+"chebyshev" | "block_jacobi" | "hybrid_gs"``): W/F coarse revisits unroll
+at trace time so every combination still runs as ONE jitted shard_map
+program, and configs differing only in these knobs share one hierarchy
+and one lowering.
 
 ``AMGConfig(setup_backend="dist", backend="dist")`` additionally runs the
 **setup phase** partitioned (:mod:`repro.amg.dist_setup`): the Galerkin

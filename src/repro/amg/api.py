@@ -17,9 +17,14 @@ Surface::
     x = bound.vcycle(b)                  # one preconditioner application
 
 Backends register through :func:`register_backend`; ``"host"`` (numpy
-reference) and ``"dist"`` (device-resident fused V-cycle) ship here, and
-future backends (device-resident setup, W/F-cycles) plug in without
-touching call sites.  :class:`SolverEngine` drains ``(matrix_id, b)``
+reference) and ``"dist"`` (device-resident fused cycle) ship here, and
+future backends (an SA variant, say) plug in without touching call sites.
+The cycle shape and smoother live in ``config.opts``
+(:class:`~repro.amg.solve.SolveOptions`: V/W/F cycles ×
+jacobi/chebyshev/block_jacobi/hybrid_gs) — they are *solve* knobs, so two
+configs that differ only there share one hierarchy, one dist lowering, and
+differ only in which compiled cycle program runs.
+:class:`SolverEngine` drains ``(matrix_id, b)``
 requests against the session cache, batching same-matrix right-hand sides
 through one multi-RHS device trace — the serving entrypoint behind
 ``repro.launch.serve --solver amg``.
@@ -34,8 +39,8 @@ import numpy as np
 
 from .csr import CSR
 from .hierarchy import Hierarchy, setup as _hierarchy_setup
-from .solve import (MultiSolveResult, SolveOptions, SolveResult, host_pcg,
-                    host_solve, host_vcycle)
+from .solve import (MultiSolveResult, SolveOptions, host_pcg, host_solve,
+                    host_vcycle)
 
 __all__ = [
     "AMGConfig", "AMGSolver", "BoundSolver", "SolverEngine", "SolveRequest",
@@ -70,7 +75,8 @@ class AMGConfig:
     # (repro.amg.dist_setup) — levels are born partitioned and only the
     # "dist" solve backend can consume them
     setup_backend: str = "host"
-    # -- solve phase (Algorithm 2)
+    # -- solve phase (Algorithm 2): cycle shape, smoother, sweep counts
+    # (pure solve knobs — sessions differing only here share setup+lowering)
     opts: SolveOptions = dataclasses.field(default_factory=SolveOptions)
     tol: float = 1e-8
     maxiter: int = 100

@@ -17,9 +17,8 @@ import dataclasses
 
 import numpy as np
 
-from ..core import (CommGraph, MachineParams, Partition, Selection, Topology,
-                    select)
-from ..core.comm_graph import VECTOR_BYTES
+from ..core import (CommGraph, MachineParams, Partition, ScheduleStats,
+                    Selection, Topology, build, select)
 from .csr import CSR
 from .hierarchy import Hierarchy
 
@@ -113,6 +112,19 @@ def analyze_hierarchy(h: Hierarchy, topo: Topology, params: MachineParams,
             gpt = matrix_comm_graph(lv.R, lv.AP, cpart, b_part=rpart)
             out.append(OpComm(l, "spgemm_PtAP", gpt, select(gpt, params, strategies)))
     return out
+
+
+def schedule_comm_stats(graph: CommGraph, strategy: str) -> dict:
+    """Modeled message/byte totals of executing ``strategy`` on ``graph``
+    once — the per-matvec communication cost the cycle-shape accounting of
+    :func:`repro.amg.dist_solve.cycle_comm_stats` multiplies by per-level
+    visit counts (W/F-cycles revisit exactly the coarse levels where the
+    NAP strategies aggregate small inter-node messages)."""
+    st = ScheduleStats.of(build(strategy, graph))
+    return {"inter_msgs": int(st.inter_msg_count),
+            "inter_bytes": float(st.inter_bytes_total),
+            "intra_msgs": int(st.intra_msg_count),
+            "intra_bytes": float(st.intra_bytes_total)}
 
 
 def rect_vector_graph(M: CSR, row_part: Partition, col_part: Partition) -> CommGraph:

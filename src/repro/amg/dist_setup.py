@@ -52,7 +52,7 @@ import time
 
 import numpy as np
 
-from ..core import CommGraph, MachineParams, Partition, Topology, select
+from ..core import MachineParams, Partition, Topology, select
 from ..core.nap_collectives import (MatrixHaloPlan, build_matrix_halo_plan,
                                     matrix_halo_exchange)
 from ..core.perf_model import TPU_V5E

@@ -25,12 +25,18 @@ a local dense matvec).
 
 Execution
 ---------
-The entire V(pre, post)-cycle — smoother sweeps, residual, restriction,
-coarse solve, interpolation + correction — is traced into ONE jitted
-``shard_map`` program (recursion unrolled over levels at trace time).  Each
-matvec runs halo-exchange collectives for its operator's selected strategy
-followed by a local ELL SpMV, optionally through the Pallas
-:func:`~repro.kernels.spmv.spmv.ell_spmv` kernel.  Norms and dot products for
+The entire cycle — smoother sweeps, residual, restriction, coarse solve,
+interpolation + correction — is traced into ONE jitted ``shard_map``
+program (recursion unrolled over levels at trace time; W- and F-cycles
+unroll their repeated coarse visits the same way, so a W-cycle is still a
+single fused device program, just with 2^ℓ visits of level ℓ inlined).
+Each matvec runs halo-exchange collectives for its operator's selected
+strategy followed by a local ELL SpMV, optionally through the Pallas
+:func:`~repro.kernels.spmv.spmv.ell_spmv` kernel.  The block smoothers
+(block-Jacobi, hybrid Gauss-Seidel) apply a per-device dense factor —
+block-diagonal inverses / (D+L)⁻¹ of the device's diagonal block, lowered
+alongside the ELL arrays — after the same halo'd residual, so their
+communication is exactly one SpMV per sweep.  Norms and dot products for
 stationary iteration and PCG use :func:`~repro.core.nap_collectives.hier_psum`
 (NAP-3 all-reduce).  Only the convergence check touches the host: one scalar
 residual norm per outer iteration.
@@ -48,12 +54,14 @@ from ..core.nap_collectives import hier_all_gather, hier_psum
 from ..core.perf_model import TPU_V5E, MachineParams
 from ..core.selector import select
 from ..core.topology import Partition, Topology
-from .dist import rect_vector_graph
+from .dist import rect_vector_graph, schedule_comm_stats
 from .dist_spmv import (DistOperator, build_dist_operator,
-                        build_dist_operator_from_blocks)
+                        build_dist_operator_from_blocks, local_square_block)
 from .hierarchy import Hierarchy
 from .interpolation import estimate_rho_DinvA
 from .smoothers import chebyshev_coeffs, chebyshev_recurrence
+from .solve import (CYCLE_CHILDREN, MultiSolveResult, SolveOptions,
+                    SolveResult, level_visits)
 
 DEV_AXES = ("pod", "lane")
 SOLVE_STRATEGIES = ("standard", "nap2", "nap3")
@@ -71,6 +79,46 @@ class DistLevel:
     coarse_inv: np.ndarray | None = None  # [D, rows_local, D*rows_local]
     strategies: dict[str, str] = dataclasses.field(default_factory=dict)
     modeled: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
+    # per-op modeled message/byte counts for the selected strategy
+    # (schedule_comm_stats), consumed by cycle_comm_stats
+    comm_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
+    # per-device diagonal square blocks of A (local column ids) — the
+    # source the block smoothers' dense factors are lowered from
+    local_A: list | None = None
+    _minv_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def smoother_minv(self, kind: str, block_size: int = 0) -> np.ndarray:
+        """[D, m, m] dense smoother factor M⁻¹ (m = padded local rows).
+
+        ``kind="bj"``: inverse of the block-diagonal of the local block
+        (``block_size`` grid restarting at the device's first row — blocks
+        never straddle devices).  ``kind="gs"``: inverse of the local
+        (D + L) factor, i.e. hybrid forward Gauss-Seidel.  Padded/empty
+        diagonals become 1 so padded rows update by exactly zero.
+        """
+        key = (kind, block_size)
+        got = self._minv_cache.get(key)
+        if got is not None:
+            return got
+        assert self.local_A is not None, "no local blocks on this level"
+        m = self.A.rows_local
+        out = np.zeros((len(self.local_A), m, m))
+        idx = np.arange(m)
+        for d, blk in enumerate(self.local_A):
+            dense = np.zeros((m, m))
+            dense[: blk.nrows, : blk.nrows] = blk.to_dense()
+            if kind == "bj":
+                same = (idx[:, None] // block_size) == (idx[None, :] // block_size)
+                dense = np.where(same, dense, 0.0)
+            elif kind == "gs":
+                dense = np.tril(dense)
+            else:
+                raise ValueError(f"unknown smoother factor kind {kind!r}")
+            diag = np.diagonal(dense).copy()
+            np.fill_diagonal(dense, np.where(diag == 0, 1.0, diag))
+            out[d] = np.linalg.inv(dense)
+        self._minv_cache[key] = out
+        return out
 
 
 class DistHierarchy:
@@ -96,7 +144,12 @@ class DistHierarchy:
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.reduce_strategy = reduce_strategy
-        self._programs: dict[tuple, dict] = {}
+        # program key (traced-knob subset of opts) -> (programs dict,
+        # run arrays); see :meth:`programs`
+        self._programs: dict[tuple, tuple] = {}
+        # (smoother kind, block_size) -> level arrays extended with the
+        # lowered dense smoother factors ("minv")
+        self._arrs_ex: dict[tuple, list] = {}
         spec = jax.sharding.PartitionSpec(DEV_AXES)
         sharding = jax.sharding.NamedSharding(mesh, spec)
         self._dev_spec = spec
@@ -220,6 +273,7 @@ class DistHierarchy:
             dl = DistLevel(A=Aop, dinv=dinv_dev,
                            strategies={"spmv_A": sA},
                            modeled={"spmv_A": tA})
+            dl.comm_stats["spmv_A"] = schedule_comm_stats(gA, sA)
             if lv.P is not None and l + 1 < len(src_levels):
                 cpart = parts[l + 1]
                 gP = rect_vector_graph(lv.P, part, cpart)
@@ -231,6 +285,12 @@ class DistHierarchy:
                 dl.rho = estimate_rho_DinvA(lv.A)
                 dl.strategies.update(interp=sP, restrict=sR)
                 dl.modeled.update(interp=tP, restrict=tR)
+                dl.comm_stats["interp"] = schedule_comm_stats(gP, sP)
+                dl.comm_stats["restrict"] = schedule_comm_stats(gR, sR)
+                # diagonal square blocks feed the block smoothers' dense
+                # factors (coarsest level never smooths — skip it there)
+                dl.local_A = [local_square_block(lv.A, part, q)
+                              for q in range(D)]
             else:
                 if lv.P is not None:
                     # a stall-pop in setup leaves a dangling P on the last
@@ -317,21 +377,34 @@ class DistHierarchy:
     def _relax(self, dl: DistLevel, arrs: dict, x, b, opts, sweeps: int):
         if sweeps == 0:
             return x
-        aA, dinv = arrs["A"], arrs["dinv"]
+        aA = arrs["A"]
         if opts.smoother == "jacobi":
+            dinv = arrs["dinv"]
             for _ in range(sweeps):
                 x = x + opts.omega * dinv * (b - self._spmv(dl.A, aA, x))
+            return x
+        if opts.smoother in ("block_jacobi", "hybrid_gs"):
+            # x += w · M⁻¹ (b − A x): the halo'd residual carries every
+            # off-device coupling, the dense local factor does the rest
+            minv = arrs["minv"]
+            w = opts.omega if opts.smoother == "block_jacobi" else 1.0
+            for _ in range(sweeps):
+                x = x + w * (minv @ (b - self._spmv(dl.A, aA, x)))
             return x
         # Chebyshev via the recurrence shared with the host backend, the
         # matvec swapped for the level's distributed SpMV
         degree = opts.cheby_degree * sweeps
         theta, delta, sigma = chebyshev_coeffs(dl.rho)
         return chebyshev_recurrence(
-            lambda v: self._spmv(dl.A, aA, v), dinv, x, b, degree,
+            lambda v: self._spmv(dl.A, aA, v), arrs["dinv"], x, b, degree,
             theta, delta, sigma)
 
-    def _vcycle_dev(self, arrs, b, x, opts, level: int = 0):
-        """One V-cycle, fully on device (recursion unrolled at trace time)."""
+    def _cycle_dev(self, arrs, b, x, opts, level: int = 0,
+                   shape: str | None = None):
+        """One cycle, fully on device.  The per-shape coarse revisits of
+        :data:`~repro.amg.solve.CYCLE_CHILDREN` are unrolled at trace time,
+        so W/F-cycles stay ONE jitted shard_map program."""
+        shape = shape or opts.cycle
         dl = self.levels[level]
         a = arrs[level]
         if dl.coarse_inv is not None:                 # coarsest: direct solve
@@ -342,24 +415,65 @@ class DistHierarchy:
         x = self._relax(dl, a, x, b, opts, opts.presweeps)
         r = b - self._spmv(dl.A, a["A"], x)
         rc = self._spmv(dl.R, a["R"], r)
-        ec = self._vcycle_dev(arrs, rc, None, opts, level + 1)
+        ec = None
+        for child in CYCLE_CHILDREN[shape]:           # coarse-grid solve(s)
+            ec = self._cycle_dev(arrs, rc, ec, opts, level + 1, shape=child)
         x = x + self._spmv(dl.P, a["P"], ec)
         x = self._relax(dl, a, x, b, opts, opts.postsweeps)
         return x
 
     # ------------------------------------------------------------- programs
-    def programs(self, opts) -> dict:
-        """Jitted shard_map programs for one option set (cached).
+    def _smoother_arrs_key(self, opts) -> tuple | None:
+        """Key of the extra lowered arrays ``opts``'s smoother needs."""
+        if opts.smoother == "block_jacobi":
+            return ("bj", opts.block_size)
+        if opts.smoother == "hybrid_gs":
+            return ("gs", 0)
+        return None
 
+    def run_arrays(self, opts) -> list:
+        """Per-level device arrays for one option set.
+
+        Jacobi/Chebyshev run on the base arrays; the block smoothers get the
+        base dicts extended with their dense local factor (``minv``, lowered
+        lazily once per (kind, block_size) and shared across option sets —
+        the base ELL/halo arrays are shared by reference, never re-placed).
+        """
+        key = self._smoother_arrs_key(opts)
+        if key is None:
+            return self._arrs
+        got = self._arrs_ex.get(key)
+        if got is None:
+            got = []
+            for dl, base in zip(self.levels, self._arrs):
+                a = dict(base)
+                if dl.coarse_inv is None:
+                    mv = dl.smoother_minv(*key).astype(self.dtype)
+                    a["minv"] = jax.device_put(mv, self._sharding)
+                got.append(a)
+            self._arrs_ex[key] = got
+        return got
+
+    def programs(self, opts) -> tuple:
+        """``(progs, arrs)`` for one option set (cached per ``opts``).
+
+        ``progs`` holds the jitted shard_map programs — the cycle shape and
+        smoother are baked in at trace time — and ``arrs`` the matching
+        per-level device arrays to pass them (:meth:`run_arrays`).
         Single-RHS programs take [local] vectors; the ``*_m`` variants take
-        [local, k] multi-RHS blocks — the V-cycle is vmapped over the RHS
+        [local, k] multi-RHS blocks — the cycle is vmapped over the RHS
         axis inside the shard_map body, so k systems share ONE device trace
         per program (norms/dots come back as replicated [k] vectors).
+
+        The cache key covers only the knobs the traced program reads —
+        host-reference-only knobs (``smoother_parts``; ``block_size`` for
+        non-block smoothers) never force a bitwise-identical re-compile.
         """
-        key = (opts.smoother, opts.presweeps, opts.postsweeps, opts.omega,
-               opts.cheby_degree)
+        key = (opts.cycle, opts.smoother, opts.presweeps, opts.postsweeps,
+               opts.omega, opts.cheby_degree, self._smoother_arrs_key(opts))
         if key in self._programs:
             return self._programs[key]
+        run_arrs = self.run_arrays(opts)
         dev = self._dev_spec
         rep = jax.sharding.PartitionSpec()
         mesh = self.mesh
@@ -381,10 +495,10 @@ class DistHierarchy:
         def vcycle_m(arrs, b, x):                   # batched V-cycle
             if x is None:
                 return jax.vmap(
-                    lambda bc: self._vcycle_dev(arrs, bc, None, opts),
+                    lambda bc: self._cycle_dev(arrs, bc, None, opts),
                     in_axes=1, out_axes=1)(b)
             return jax.vmap(
-                lambda bc, xc: self._vcycle_dev(arrs, bc, xc, opts),
+                lambda bc, xc: self._cycle_dev(arrs, bc, xc, opts),
                 in_axes=1, out_axes=1)(b, x)
 
         def resid_norm_body(x, b, arrs):
@@ -399,7 +513,7 @@ class DistHierarchy:
 
         def cycle_body(x, b, arrs):
             x, b, arrs = x[0], b[0], squeeze(arrs)
-            x = self._vcycle_dev(arrs, b, x, opts)
+            x = self._cycle_dev(arrs, b, x, opts)
             r = b - spmv0(arrs, x)
             return x[None], self._pnorm(r)
 
@@ -411,7 +525,7 @@ class DistHierarchy:
 
         def vcycle_body(b, arrs):
             b, arrs = b[0], squeeze(arrs)
-            return self._vcycle_dev(arrs, b, None, opts)[None]
+            return self._cycle_dev(arrs, b, None, opts)[None]
 
         def vcycle_m_body(b, arrs):
             b, arrs = b[0], squeeze(arrs)
@@ -420,7 +534,7 @@ class DistHierarchy:
         def pcg_init_body(x, b, arrs):
             x, b, arrs = x[0], b[0], squeeze(arrs)
             r = b - spmv0(arrs, x)                  # x0 warm start
-            z = self._vcycle_dev(arrs, r, None, opts)
+            z = self._cycle_dev(arrs, r, None, opts)
             rz = self._pdot(r, z)
             return r[None], z[None], rz, self._pnorm(r)
 
@@ -439,7 +553,7 @@ class DistHierarchy:
             x = x + alpha * p
             r = r - alpha * Ap
             rnorm = self._pnorm(r)
-            z = self._vcycle_dev(arrs, r, None, opts)
+            z = self._cycle_dev(arrs, r, None, opts)
             rz_new = self._pdot(r, z)
             p = z + (rz_new / rz) * p
             return x[None], r[None], p[None], rz_new, rnorm
@@ -477,8 +591,8 @@ class DistHierarchy:
             "pcg_step_m": smap(pcg_step_m_body, (dev, dev, dev, rep, dev),
                                (dev, dev, dev, rep, rep)),
         }
-        self._programs[key] = progs
-        return progs
+        self._programs[key] = (progs, run_arrs)
+        return self._programs[key]
 
 
 # --------------------------------------------------------------------------
@@ -551,15 +665,55 @@ def _norms(b: np.ndarray):
     return np.where(nb == 0, 1.0, nb)
 
 
+def cycle_comm_stats(dh: DistHierarchy, opts=None) -> dict:
+    """Modeled communication of ONE cycle of ``opts``'s shape + smoother.
+
+    Multiplies each level's per-op message/byte counts (the selected
+    strategy's :func:`~repro.amg.dist.schedule_comm_stats`) by the number
+    of SpMVs a visit costs and by the cycle shape's per-level visit counts
+    — the quantity that makes W/F-cycles coarse-level-communication heavy
+    and hence where NAP-2/NAP-3 aggregation pays.  ``coarse_*`` totals
+    cover levels ≥ 1 (the coarsest direct solve is an all-gather, not a
+    halo exchange, and is excluded).
+    """
+    opts = opts or SolveOptions()
+    visits = level_visits(len(dh.levels), opts.cycle)
+    sweep_spmvs = opts.spmvs_per_sweep() * (opts.presweeps + opts.postsweeps)
+    keys = ("inter_msgs", "inter_bytes", "intra_msgs", "intra_bytes")
+    per_level = []
+    totals = dict.fromkeys(keys, 0)
+    coarse = {"coarse_inter_msgs": 0, "coarse_intra_msgs": 0}
+    for l, dl in enumerate(dh.levels):
+        row = dict.fromkeys(keys, 0)
+        if dl.coarse_inv is None and "spmv_A" in dl.comm_stats:
+            n_spmv = sweep_spmvs + 1                  # sweeps + residual
+            for k in keys:
+                row[k] += n_spmv * dl.comm_stats["spmv_A"][k]
+            for op in ("interp", "restrict"):
+                if op in dl.comm_stats:
+                    for k in keys:
+                        row[k] += dl.comm_stats[op][k]
+        entry = {"level": l, "visits": visits[l]}
+        for k in keys:
+            entry[k] = row[k] * visits[l]
+            totals[k] += entry[k]
+        if l > 0:
+            coarse["coarse_inter_msgs"] += entry["inter_msgs"]
+            coarse["coarse_intra_msgs"] += entry["intra_msgs"]
+        per_level.append(entry)
+    return {"cycle": opts.cycle, "smoother": opts.smoother,
+            "per_level": per_level, **totals, **coarse}
+
+
 def dist_vcycle(dh: DistHierarchy, b: np.ndarray, opts=None) -> np.ndarray:
-    """One device-resident V-cycle from a zero initial guess ([n] or [n, k])."""
-    from .solve import SolveOptions
+    """One device-resident cycle (``opts.cycle`` shape) from a zero initial
+    guess (``b``: [n] or [n, k])."""
     opts = opts or SolveOptions()
     b = np.asarray(b, dtype=np.float64)
-    progs = dh.programs(opts)
+    progs, arrs = dh.programs(opts)
     bd = dh.scatter(b)
     prog = progs["vcycle_m" if b.ndim == 2 else "vcycle"]
-    return dh.gather(prog(bd, dh._arrs))
+    return dh.gather(prog(bd, arrs))
 
 
 def _column_results(dh, x, res, nb, tol):
@@ -570,7 +724,6 @@ def _column_results(dh, x, res, nb, tol):
     kept cycling for slower columns) and a residual history truncated
     there, so ``iterations``/``avg_conv_factor`` agree across backends.
     """
-    from .solve import MultiSolveResult, SolveResult
     X = dh.gather(x)
     k = X.shape[1]
     cols = []
@@ -587,35 +740,34 @@ def _column_results(dh, x, res, nb, tol):
 
 def dist_solve(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
                maxiter: int = 100, opts=None, x0: np.ndarray | None = None):
-    """Stationary AMG iteration x ← x + V(b − Ax), fused on device.
+    """Stationary AMG iteration x ← x + cycle(b − Ax), fused on device.
 
     ``b`` may be ``[n]`` or ``[n, k]``; the multi-RHS form batches all k
     systems through one device trace and iterates until every column
     converges.
     """
-    from .solve import SolveOptions, SolveResult
     opts = opts or SolveOptions()
     b = np.asarray(b, dtype=np.float64)
     multi = b.ndim == 2
-    progs = dh.programs(opts)
+    progs, arrs = dh.programs(opts)
     bd = dh.scatter(b)
     x = dh.scatter(np.zeros_like(b) if x0 is None else np.asarray(x0))
     if multi:
         nb = _norms(b)
-        res = [np.asarray(progs["resid_norm_m"](x, bd, dh._arrs),
+        res = [np.asarray(progs["resid_norm_m"](x, bd, arrs),
                           dtype=np.float64)]
         for _ in range(maxiter):
             if (res[-1] / nb < tol).all():
                 break
-            x, rn = progs["cycle_m"](x, bd, dh._arrs)
+            x, rn = progs["cycle_m"](x, bd, arrs)
             res.append(np.asarray(rn, dtype=np.float64))
         return _column_results(dh, x, res, nb, tol)
     nb = float(np.linalg.norm(b)) or 1.0
-    res = [float(progs["resid_norm"](x, bd, dh._arrs))]
+    res = [float(progs["resid_norm"](x, bd, arrs))]
     for it in range(maxiter):
         if res[-1] / nb < tol:
             return SolveResult(dh.gather(x), res, it, True)
-        x, rn = progs["cycle"](x, bd, dh._arrs)
+        x, rn = progs["cycle"](x, bd, arrs)
         res.append(float(rn))
     return SolveResult(dh.gather(x), res, maxiter, res[-1] / nb < tol)
 
@@ -626,15 +778,14 @@ def dist_pcg(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
 
     Supports ``x0=`` warm starts and multi-RHS ``b`` of shape ``[n, k]``.
     """
-    from .solve import SolveOptions, SolveResult
     opts = opts or SolveOptions()
     b = np.asarray(b, dtype=np.float64)
     multi = b.ndim == 2
-    progs = dh.programs(opts)
+    progs, arrs = dh.programs(opts)
     bd = dh.scatter(b)
     x = dh.scatter(np.zeros_like(b) if x0 is None else np.asarray(x0))
     suffix = "_m" if multi else ""
-    r, z, rz, rnorm = progs["pcg_init" + suffix](x, bd, dh._arrs)
+    r, z, rz, rnorm = progs["pcg_init" + suffix](x, bd, arrs)
     p = z
     if multi:
         nb = _norms(b)
@@ -642,7 +793,7 @@ def dist_pcg(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
         for _ in range(maxiter):
             if (res[-1] / nb < tol).all():
                 break
-            x, r, p, rz, rnorm = progs["pcg_step_m"](x, r, p, rz, dh._arrs)
+            x, r, p, rz, rnorm = progs["pcg_step_m"](x, r, p, rz, arrs)
             res.append(np.asarray(rnorm, dtype=np.float64))
         return _column_results(dh, x, res, nb, tol)
     nb = float(np.linalg.norm(b)) or 1.0
@@ -650,6 +801,6 @@ def dist_pcg(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
     for it in range(maxiter):
         if res[-1] / nb < tol:
             return SolveResult(dh.gather(x), res, it, True)
-        x, r, p, rz, rnorm = progs["pcg_step"](x, r, p, rz, dh._arrs)
+        x, r, p, rz, rnorm = progs["pcg_step"](x, r, p, rz, arrs)
         res.append(float(rnorm))
     return SolveResult(dh.gather(x), res, maxiter, res[-1] / nb < tol)

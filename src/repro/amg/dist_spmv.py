@@ -135,6 +135,24 @@ class DistOperator:
         return out
 
 
+def local_square_block(M, part: Partition, d: int) -> CSR:
+    """Device d's diagonal square block of ``M`` (rows AND columns in
+    ``part.local_range(d)``, columns shifted to local 0-based ids).
+
+    This is the sub-operator the block smoothers factor locally — the
+    block-Jacobi diagonal-block inverses and the hybrid-GS (D+L)⁻¹ factor
+    are lowered from it alongside the ELL blocks, while couplings outside
+    it stay in the halo'd residual.  ``M`` may be a global CSR or a
+    born-partitioned BlockMatrix (both expose ``submatrix_rows``).
+    """
+    lo, hi = part.local_range(d)
+    sub = M.submatrix_rows(lo, hi)
+    r, c = sub.rows_expanded(), sub.indices
+    keep = (c >= lo) & (c < hi)
+    return CSR.from_coo(r[keep], c[keep] - lo, sub.data[keep],
+                        (hi - lo, hi - lo))
+
+
 def _assemble_operator(block_of, K: int, n_pods: int, lanes: int,
                        strategy: str, row_part: Partition,
                        col_part: Partition, graph: CommGraph,

@@ -20,6 +20,11 @@ class Level:
     R: CSR | None = None        # restriction = Pᵀ
     AP: CSR | None = None       # intermediate Galerkin product (Fig. 21 op)
     setup_seconds: float = 0.0
+    # per-level smoother data extracted once and carried on the level
+    # (block-Jacobi diagonal-block inverses, keyed by (kind, block_size,
+    # parts)) — the setup-phase half of the block smoothers
+    smoother_cache: dict = dataclasses.field(default_factory=dict,
+                                             repr=False, compare=False)
 
 
 @dataclasses.dataclass

@@ -1,8 +1,22 @@
 """Relaxation methods for the solve phase (Algorithm 2, ``relax``).
 
-Weighted/l1-Jacobi and Chebyshev — the smoothers used at scale in parallel
-AMG (SpMV-only, communication pattern identical to A·x, so every sweep uses
-the level's selected node-aware strategy).
+Pointwise smoothers — weighted/l1-Jacobi and Chebyshev — plus the two
+*block* smoothers the paper's communication argument extends to:
+
+* :func:`block_jacobi` — per-block diagonal inverses (dense ``bs×bs``
+  blocks), same SpMV-shaped communication as Jacobi but a denser local
+  update; the block inverses are extracted once at setup and carried on the
+  level (:attr:`repro.amg.hierarchy.Level.smoother_cache`).
+* :func:`hybrid_gs` — hybrid Gauss-Seidel: exact forward Gauss-Seidel
+  *within* each contiguous row part, Jacobi *across* parts, off-part values
+  read from the pre-sweep iterate (on the distributed backend those are
+  exactly the halo'd off-process values).  This is the processor-block
+  Gauss-Seidel of parallel AMG codes: its iteration depends on the row
+  partition, so the host reference takes the part boundaries explicitly.
+
+Every sweep of every smoother is SpMV-based, so the communication pattern
+is identical to A·x and every sweep uses the level's selected node-aware
+strategy.
 """
 from __future__ import annotations
 
@@ -10,6 +24,103 @@ import numpy as np
 
 from .csr import CSR
 from .interpolation import estimate_rho_DinvA
+
+
+def balanced_offsets(n: int, parts: int) -> np.ndarray:
+    """Boundaries of a balanced contiguous split of ``n`` rows into
+    ``parts`` pieces — the same first-parts-get-the-extra rule as
+    :meth:`repro.core.topology.Partition.balanced`, so a host smoother run
+    with ``parts == n_devices`` reproduces the device partition exactly."""
+    base, extra = divmod(n, parts)
+    counts = np.full(parts, base, dtype=np.int64)
+    counts[:extra] += 1
+    offsets = np.zeros(parts + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return offsets
+
+
+def block_partition(n: int, bs: int, parts: int = 1) -> list[tuple[int, int]]:
+    """Block-Jacobi block ranges: a ``bs``-grid laid down *within* each of
+    ``parts`` balanced row parts (blocks never straddle a part boundary —
+    the distributed backend cannot invert across devices, and the host
+    reference mirrors that rule so the two iterate identically)."""
+    bounds = balanced_offsets(n, parts)
+    out = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        for s in range(int(lo), int(hi), bs):
+            out.append((s, min(s + bs, int(hi))))
+    return out
+
+
+def block_diag_inv(A: CSR, bs: int, parts: int = 1) -> list[tuple[int, np.ndarray]]:
+    """Dense inverses of A's block diagonal: ``[(start, inv)]`` per block.
+
+    Entries of A outside a block's row/column range are ignored (they belong
+    to the Jacobi coupling handled by the residual); zero diagonals are
+    replaced by 1 so padded/empty rows update by exactly zero.
+    """
+    out = []
+    for s, e in block_partition(A.nrows, bs, parts):
+        sub = A.submatrix_rows(s, e)
+        r, c = sub.rows_expanded(), sub.indices
+        keep = (c >= s) & (c < e)
+        B = np.zeros((e - s, e - s))
+        B[r[keep], c[keep] - s] = sub.data[keep]
+        d = np.diagonal(B).copy()
+        np.fill_diagonal(B, np.where(d == 0, 1.0, d))
+        out.append((s, np.linalg.inv(B)))
+    return out
+
+
+def block_jacobi(A: CSR, x: np.ndarray, b: np.ndarray, block_size: int = 4,
+                 omega: float = 2.0 / 3.0, iterations: int = 1,
+                 parts: int = 1, binv=None) -> np.ndarray:
+    """Weighted block-Jacobi: x += ω · blockdiag(A)⁻¹ (b − A x).
+
+    ``binv`` may carry pre-extracted inverses from :func:`block_diag_inv`
+    (the setup-time form carried on the level); it must have been built with
+    the same ``block_size``/``parts``.
+    """
+    if binv is None:
+        binv = block_diag_inv(A, block_size, parts)
+    for _ in range(iterations):
+        r = b - A.matvec(x)
+        z = np.zeros_like(x)
+        for s, inv in binv:
+            z[s: s + inv.shape[0]] = inv @ r[s: s + inv.shape[0]]
+        x = x + omega * z
+    return x
+
+
+def hybrid_gs(A: CSR, x: np.ndarray, b: np.ndarray,
+              boundaries: np.ndarray | None = None,
+              iterations: int = 1) -> np.ndarray:
+    """Hybrid (processor-block) forward Gauss-Seidel.
+
+    One sweep solves ``(D + L_part) z = b − A x`` per contiguous row part
+    (forward substitution within the part; couplings to rows outside the
+    part — other parts *and* off-process halo values on the distributed
+    backend — enter through the lagged residual) and updates ``x += z``.
+    With ``boundaries=[0, n]`` (the default) this is exact sequential
+    forward Gauss-Seidel; with the device partition's boundaries it is
+    bit-for-bit the distributed backend's smoother.
+    """
+    n = A.nrows
+    bounds = (np.array([0, n], dtype=np.int64) if boundaries is None
+              else np.asarray(boundaries, dtype=np.int64))
+    for _ in range(iterations):
+        r = b - A.matvec(x)
+        z = np.zeros_like(x)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            for i in range(int(lo), int(hi)):
+                s, e = int(A.indptr[i]), int(A.indptr[i + 1])
+                cols, vals = A.indices[s:e], A.data[s:e]
+                in_part = (cols >= lo) & (cols < i)
+                acc = r[i] - vals[in_part] @ z[cols[in_part]]
+                diag = float(vals[cols == i].sum()) or 1.0
+                z[i] = acc / diag
+        x = x + z
+    return x
 
 
 def jacobi(A: CSR, x: np.ndarray, b: np.ndarray, omega: float = 2.0 / 3.0,

@@ -35,7 +35,6 @@ import numpy as np
 from .comm_graph import CommGraph
 from .compat import axis_size as _axis_size
 from .schedules import Schedule, build as build_schedule
-from .topology import Partition, Topology
 
 # --------------------------------------------------------------------------
 # Generic hierarchical collectives (LM training / MoE consumers)

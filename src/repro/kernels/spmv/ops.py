@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .ref import ell_spmv_ref
 from .spmv import ell_spmv

@@ -15,7 +15,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from ..configs import ARCHS, SHAPES, cells, get_arch, get_shape  # noqa: E402
+from ..configs import cells, get_arch, get_shape  # noqa: E402
 from ..models.model import decode_step, forward  # noqa: E402
 from ..train.optimizer import AdamWConfig  # noqa: E402
 from ..train.sharding import (batch_specs, cache_specs, named,  # noqa: E402

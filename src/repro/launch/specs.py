@@ -30,11 +30,9 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
     B, S = shape.global_batch, shape.seq_len
     if cfg.embed_input:
         tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
-        emb = None
     else:
         # stub modality frontend: precomputed frame/patch embeddings
         tok = lambda b, s: jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
-        emb = True
     if shape.kind == "train":
         return {"inputs": tok(B, S),
                 "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}

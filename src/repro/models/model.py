@@ -9,13 +9,12 @@ blocks).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from .attention import attn_decode, attn_forward, attn_params
+from .attention import attn_forward, attn_params
 from .layers import make_norm, mlp, mlp_params, normal_init
 from .moe import moe_ffn_tp, moe_params
 from .ssm import (mlstm_decode, mlstm_forward, mlstm_params, rglru_decode,

@@ -16,8 +16,6 @@ drops overflow tokens (their combine weight is zero), standard for TPU MoE.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -5,13 +5,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.model import decode_step, forward, init_cache
+from ..models.model import decode_step, forward
 
 
 @dataclasses.dataclass

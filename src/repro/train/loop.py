@@ -18,7 +18,6 @@ import signal
 import time
 
 import jax
-import numpy as np
 
 from ..ckpt import latest_step, restore, save_async
 from ..models.model import init_params

@@ -3,14 +3,13 @@ remat, and mesh shardings from :mod:`repro.train.sharding`."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models.model import loss_fn
-from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .optimizer import AdamWConfig, adamw_update
 from .sharding import batch_specs, named, param_specs
 
 

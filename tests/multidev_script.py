@@ -163,11 +163,9 @@ def check_grad_sync():
             np.testing.assert_allclose(np.asarray(o2)[d], expect2, atol=tol)
     # error feedback: repeated syncs of the SAME gradient average out the
     # quantization error (residual is re-injected)
-    grads_const = {"a": g1}
     def body_ef(a):
         grads = {"a": a[0]}
         ef = init_error_feedback(grads, LANES)
-        acc = jnp.zeros_like(grads["a"].mean(0) if False else grads["a"])
         total = jnp.zeros((33,), jnp.float32)
         for _ in range(8):
             synced, ef = hier_grad_sync(grads, "pod", "lane", "nap3",

@@ -1,0 +1,84 @@
+"""Tests for the CI benchmark regression gate (scripts/check_bench.py)."""
+import importlib.util
+import json
+import pathlib
+
+SCRIPT = pathlib.Path(__file__).parents[1] / "scripts" / "check_bench.py"
+_spec = importlib.util.spec_from_file_location("check_bench", SCRIPT)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def write(path, rows):
+    path.write_text(json.dumps({"benchmark": "t", "rows": rows}))
+    return str(path)
+
+
+def row(name, derived):
+    return {"name": name, "us_per_call": 1.0, "derived": derived}
+
+
+def run(tmp_path, base_rows, new_rows, max_ratio=2.0):
+    base = write(tmp_path / "base.json", base_rows)
+    new = write(tmp_path / "new.json", new_rows)
+    return check_bench.main(["--baseline", base, "--new", new,
+                             "--max-ratio", str(max_ratio)])
+
+
+def test_identical_passes(tmp_path):
+    rows = [row("a", "iters=10;conv=0.25;levels=3")]
+    assert run(tmp_path, rows, rows) == 0
+
+
+def test_wallclock_is_not_gated(tmp_path):
+    base = [row("a", "iters=10;conv=0.25")]
+    new = [{"name": "a", "us_per_call": 1e9,
+            "derived": "iters=10;conv=0.25"}]
+    assert run(tmp_path, base, new) == 0
+
+
+def test_iteration_regression_fails(tmp_path):
+    base = [row("a", "iters=10;conv=0.25")]
+    assert run(tmp_path, base, [row("a", "iters=22;conv=0.25")]) == 1
+    # within 2x (+1 slack) passes
+    assert run(tmp_path, base, [row("a", "iters=20;conv=0.25")]) == 0
+
+
+def test_conv_regression_and_divergence_fail(tmp_path):
+    base = [row("a", "iters=10;conv=0.25")]
+    assert run(tmp_path, base, [row("a", "iters=10;conv=0.60")]) == 1
+    base2 = [row("a", "conv=0.80")]
+    assert run(tmp_path, base2, [row("a", "conv=1.10")]) == 1
+    assert run(tmp_path, base2, [row("a", "conv=0.90")]) == 0
+
+
+def test_missing_row_and_error_rows_fail(tmp_path):
+    base = [row("a", "conv=0.25"), row("b", "conv=0.30")]
+    assert run(tmp_path, base, [row("a", "conv=0.25")]) == 1
+    new = base + [row("dist_solve_ERROR", "boom")]
+    assert run(tmp_path, base, new) == 1
+
+
+def test_levels_mismatch_fails(tmp_path):
+    base = [row("a", "levels=3;conv=0.2")]
+    assert run(tmp_path, base, [row("a", "levels=2;conv=0.2")]) == 1
+
+
+def test_no_overlap_fails(tmp_path):
+    base = [row("a_n4096", "conv=0.25")]
+    assert run(tmp_path, base, [row("a_n512", "conv=0.25")]) == 1
+
+
+def test_parse_derived_skips_non_numeric():
+    d = check_bench.parse_derived(
+        "n=512;mesh=2x4;conv=0.166;strategy=nap2;speedup=45.9x;iters=7")
+    assert d["n"] == 512 and d["conv"] == 0.166 and d["iters"] == 7
+    assert "mesh" not in d and "strategy" not in d and "speedup" not in d
+
+
+def test_committed_baselines_pass_against_themselves():
+    root = pathlib.Path(__file__).parents[1]
+    for name in ("BENCH_dist_solve.json", "BENCH_dist_setup.json"):
+        path = root / name
+        assert check_bench.main(["--baseline", str(path),
+                                 "--new", str(path)]) == 0

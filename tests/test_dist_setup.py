@@ -23,7 +23,7 @@ from repro.amg.dist import (MATRIX_ENTRY, MATRIX_ROW_HEADER, OpComm,
 from repro.amg.dist_setup import (BlockMatrix, dist_setup_partitioned,
                                   split_rows, transpose_blocks)
 from repro.amg.problems import laplace_3d, laplace_3d_7pt
-from repro.core import BLUE_WATERS, CommGraph, Partition, Topology, select
+from repro.core import BLUE_WATERS, Partition, Topology, select
 from repro.core.nap_collectives import (build_matrix_halo_plan,
                                         matrix_halo_exchange)
 

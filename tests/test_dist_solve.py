@@ -23,7 +23,8 @@ EXPECTED = [
     "OK solve_standard", "OK pcg_standard",
     "OK solve_nap2", "OK pcg_nap2",
     "OK solve_nap3", "OK pcg_nap3",
-    "OK auto_select", "OK pallas_path", "OK chebyshev", "OK multi_rhs",
+    "OK auto_select", "OK pallas_path", "OK chebyshev",
+    "OK cycle_smoother_parity", "OK dist_setup_cycles", "OK multi_rhs",
     "ALL_OK",
 ]
 
@@ -127,6 +128,37 @@ def test_backend_dispatch_single_device():
         pcg(h, b, backend="dist", dist={"n_pods": 1})  # lanes missing
 
 
+def test_cycle_comm_stats_counts_and_smoothers():
+    """cycle_comm_stats: W doubles the coarse-visit message counts vs V on
+    a ≥3-level hierarchy, chebyshev multiplies the per-sweep SpMVs, and the
+    block smoothers compile + run through the 1x1 fused program."""
+    A = laplace_3d(8)
+    h = setup(A, solver="rs", max_coarse=30)
+    assert h.n_levels >= 3
+    from repro.amg.dist_solve import DistHierarchy, cycle_comm_stats
+    dh = DistHierarchy.build(h, 1, 1, params=BLUE_WATERS)
+    stV = cycle_comm_stats(dh, SolveOptions(cycle="V"))
+    stW = cycle_comm_stats(dh, SolveOptions(cycle="W"))
+    stF = cycle_comm_stats(dh, SolveOptions(cycle="F"))
+    assert [e["visits"] for e in stV["per_level"]] == [1, 1, 1]
+    assert [e["visits"] for e in stW["per_level"]] == [1, 2, 4]
+    assert [e["visits"] for e in stF["per_level"]] == [1, 2, 3]
+    # a 1x1 mesh communicates nothing; the structure must still be there
+    assert stW["coarse_inter_msgs"] == 2 * stV["coarse_inter_msgs"]
+    cheb = cycle_comm_stats(dh, SolveOptions(smoother="chebyshev",
+                                             cheby_degree=3))
+    assert cheb["cycle"] == "V" and cheb["smoother"] == "chebyshev"
+    # block smoothers run end-to-end on the single-device mesh and the
+    # two option sets share the lowered dense factors via _arrs_ex
+    b = A.matvec(np.ones(A.nrows))
+    for sm in ("block_jacobi", "hybrid_gs"):
+        res = solve(h, b, tol=0.0, maxiter=3,
+                    opts=SolveOptions(cycle="F", smoother=sm),
+                    backend="dist", dist=dh)
+        assert res.residuals[-1] < res.residuals[0]
+    assert set(dh._arrs_ex) == {("bj", 4), ("gs", 0)}
+
+
 @pytest.mark.slow
 def test_benchmark_smoke_mode(tmp_path):
     """benchmarks/dist_solve.py --smoke runs in seconds and emits both the
@@ -142,6 +174,11 @@ def test_benchmark_smoke_mode(tmp_path):
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     for strat in ("standard", "nap2", "nap3", "auto"):
         assert f"dist_solve_{strat}," in out.stdout
+    # cycle×smoother sweep rows with coarse-level message counts
+    for cycle in ("V", "W", "F"):
+        for sm in ("jacobi", "chebyshev", "block_jacobi", "hybrid_gs"):
+            assert f"dist_cycle_{cycle}_{sm}," in out.stdout
+    assert "coarse_inter_msgs=" in out.stdout
     import json
     data = json.loads(out_json.read_text())
     assert data["benchmark"] == "dist_solve"
@@ -161,7 +198,7 @@ def test_multidevice_dist_solve_subprocess():
     root = str(pathlib.Path(__file__).parents[1] / "src")
     env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run([sys.executable, str(SCRIPT)], capture_output=True,
-                         text=True, env=env, timeout=900)
+                         text=True, env=env, timeout=1800)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     for marker in EXPECTED:
         assert marker in out.stdout, f"missing {marker!r} in:\n{out.stdout}"

@@ -1,6 +1,5 @@
 """Pallas kernel validation: interpret=True vs pure-jnp oracles, swept over
 shapes/dtypes (per-kernel allclose requirement)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, cells, get_arch
+from repro.configs import ARCHS, cells, get_arch
 from repro.models import (decode_step, forward, init_cache, init_params,
                           loss_fn)
 

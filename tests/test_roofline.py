@@ -1,9 +1,7 @@
 """Roofline extraction tests: HLO collective parsing + term math."""
-import numpy as np
 import pytest
 
-from repro.launch.roofline import (DCI_BW, HBM_BW, ICI_LINK_BW, ICI_LINKS,
-                                   PEAK_FLOPS_BF16, collective_bytes_from_text,
+from repro.launch.roofline import (collective_bytes_from_text,
                                    parse_collectives, roofline_terms)
 
 HLO = """

@@ -8,11 +8,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.models import init_params, loss_fn
+from repro.models import init_params
 from repro.train import (AdamWConfig, DataConfig, LoopConfig, TokenPipeline,
                          TrainOptions, build_train_step, init_opt_state, train)
 from repro.train.grad_sync import dequantize_int8, quantize_int8
-from repro.train.optimizer import adamw_update, global_norm, schedule
+from repro.train.optimizer import global_norm, schedule
 from repro.ckpt import latest_step, restore, save
 
 
