@@ -192,6 +192,72 @@ def session_rows(smoke: bool | None = None):
              derived + f";speedup={cold / max(cached, 1e-12):.1f}x")]
 
 
+def serving_rows(smoke: bool | None = None):
+    """Serving throughput through :class:`~repro.amg.api.AMGService`:
+    solves/s cold (setup + lowering + compile in-band), hot (session-store
+    hit, one request per drain) and coalesced (k requests stacked into ONE
+    multi-RHS trace), on the host and dist backends.  The ``worst_rel`` /
+    ``unconverged`` fields feed the CI gate's presence + divergence check
+    (wall-clock derived solves/s stays ungated)."""
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+    import numpy as np
+
+    from repro.amg.api import AMGConfig, AMGService, clear_sessions
+    from repro.amg.problems import laplace_3d
+
+    n = 8 if smoke else 12
+    k = 4 if smoke else 8
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    A = laplace_3d(n)
+    rng = np.random.default_rng(0)
+    bs = [rng.standard_normal(A.nrows) for _ in range(k)]
+    out = []
+    for backend in ("host", "dist"):
+        tol = 1e-6 if backend == "dist" else 1e-8
+        cfg = AMGConfig(backend=backend,
+                        n_pods=n_pods if backend == "dist" else 1,
+                        lanes=lanes if backend == "dist" else 1,
+                        machine="blue_waters", tol=tol)
+        clear_sessions()
+        svc = AMGService(cfg, max_rhs=k)
+        svc.register("m", A)
+
+        def measure(tag, reqs, one_per_drain):
+            t0 = time.perf_counter()
+            tickets = []
+            if one_per_drain:
+                for b in reqs:
+                    tickets.append(svc.submit("m", b, method="pcg"))
+                    svc.drain()
+            else:
+                tickets = [svc.submit("m", b, method="pcg") for b in reqs]
+                svc.drain()
+            dt = time.perf_counter() - t0
+            worst = max(
+                np.linalg.norm(b - A.matvec(t.result())) / np.linalg.norm(b)
+                for b, t in zip(reqs, tickets))
+            unconv = sum(not t.diagnostics["converged"] for t in tickets)
+            return (f"serve_{tag}_{backend}", dt / len(reqs) * 1e6,
+                    f"backend={backend};requests={len(reqs)};"
+                    f"solves_per_s={len(reqs) / dt:.2f};"
+                    f"batches={svc.stats['batches']};"
+                    f"worst_rel={worst:.3e};unconverged={unconv}")
+
+        # cold: ONE request paying setup + lowering + compile in-band
+        out.append(measure("cold", bs[:1], one_per_drain=True))
+        # hot: k sequential single-request drains against the warm session
+        out.append(measure("hot", bs, one_per_drain=True))
+        base_batches = svc.stats["batches"]
+        # coalesced: the same k requests stacked into ONE multi-RHS trace
+        row = measure("coalesced", bs, one_per_drain=False)
+        assert svc.stats["batches"] == base_batches + 1, svc.stats
+        out.append(row)
+    clear_sessions()
+    return out
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -202,7 +268,8 @@ def main(argv=None) -> None:
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
     data = (rows(smoke=args.smoke) + cycle_smoother_rows(smoke=args.smoke)
-            + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke))
+            + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke)
+            + serving_rows(smoke=args.smoke))
     print("name,us_per_call,derived")
     for name, us, derived in data:
         print(f"{name},{us:.2f},{derived}")

@@ -21,6 +21,7 @@ MODULES = [
     ("dist_solve_cycles", lambda: dist_solve.cycle_smoother_rows(smoke=True)),
     ("dist_solve_weak", lambda: dist_solve.weak_rows(smoke=True)),
     ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
+    ("dist_solve_serving", lambda: dist_solve.serving_rows(smoke=True)),
     ("dist_setup", lambda: dist_setup.rows(smoke=True)),
     ("roofline", lambda: lm_roofline.rows()),
 ]

@@ -16,14 +16,27 @@ node-aware setup — the host ``Hierarchy``, the lowered ``DistHierarchy``
 from the paper's performance models + halo plans), and its compiled fused
 V-cycle/PCG shard_map programs — is built once and reused across solves.
 Backends plug in through :func:`~repro.amg.api.register_backend`
-(``"host"`` = reference numpy, ``"dist"`` = device-resident fused cycle);
-:class:`~repro.amg.api.SolverEngine` serves batched ``(matrix_id, b)``
-request streams on top of the same cache.  The cycle shape and smoother
-are ``SolveOptions`` knobs (``cycle="V"|"W"|"F"``, ``smoother="jacobi" |
-"chebyshev" | "block_jacobi" | "hybrid_gs"``): W/F coarse revisits unroll
-at trace time so every combination still runs as ONE jitted shard_map
-program, and configs differing only in these knobs share one hierarchy
-and one lowering.
+(``"host"`` = reference numpy, ``"dist"`` = device-resident fused cycle).
+The cycle shape and smoother are ``SolveOptions`` knobs
+(``cycle="V"|"W"|"F"``, ``smoother="jacobi" | "chebyshev" |
+"block_jacobi" | "hybrid_gs" | "hybrid_gs_sym"``): W/F coarse revisits
+unroll at trace time so every combination still runs as ONE jitted
+shard_map program, configs differing only in these knobs share one
+hierarchy and one lowering, and the symmetric hybrid-GS sweep gives PCG
+an SPD preconditioner on every backend.
+
+**Serving** is :class:`~repro.amg.api.AMGService`: ticketed async
+admission (``submit() -> Ticket``; ``ticket.result()`` blocks), a
+coalescing window that stacks same-(matrix, knobs) right-hand sides from
+*separate submission bursts* into one multi-RHS device trace, per-request
+``tol``/``maxiter``/``x0``, priority classes with starvation-free aging,
+and a versioned wire codec (matrices registered by content fingerprint,
+requests as schema-tagged payloads) so the whole service can be driven
+over a byte transport — ``repro.launch.serve --solver amg --wire``.
+Sessions live in an instantiable :class:`~repro.amg.api.SessionStore`
+with pluggable LRU / TTL / cost-aware bytes-budget eviction and
+hit/evict/setup-cost accounting; the old synchronous
+:class:`~repro.amg.api.SolverEngine` survives as a deprecation shim.
 
 ``AMGConfig(setup_backend="dist", backend="dist")`` additionally runs the
 **setup phase** partitioned (:mod:`repro.amg.dist_setup`): the Galerkin
@@ -38,8 +51,9 @@ legacy ``dist=`` argument (a prebuilt ``DistHierarchy`` or a build-kwargs
 dict, now cached per hierarchy).  ``DistHierarchy`` is exported lazily so
 numpy-only users never import JAX.
 """
-from .api import (AMGConfig, AMGSolver, BoundSolver, SolveRequest,
-                  SolverEngine, available_backends, register_backend)
+from .api import (AMGConfig, AMGService, AMGSolver, BoundSolver,
+                  ServiceReport, SessionStore, SolveRequest, SolverEngine,
+                  Ticket, available_backends, register_backend)
 from .csr import CSR
 from .hierarchy import Hierarchy, Level, setup
 from .solve import (MultiSolveResult, SolveOptions, SolveResult, pcg, solve,
@@ -47,7 +61,8 @@ from .solve import (MultiSolveResult, SolveOptions, SolveResult, pcg, solve,
 
 __all__ = ["CSR", "Hierarchy", "Level", "setup", "SolveOptions", "SolveResult",
            "MultiSolveResult", "pcg", "solve", "vcycle", "AMGConfig",
-           "AMGSolver", "BoundSolver", "SolverEngine", "SolveRequest",
+           "AMGService", "AMGSolver", "BoundSolver", "ServiceReport",
+           "SessionStore", "SolverEngine", "SolveRequest", "Ticket",
            "available_backends", "register_backend", "DistHierarchy"]
 
 # NOTE: the distributed setup entrypoint is deliberately NOT re-exported

@@ -1,0 +1,72 @@
+"""Session + serving API: from one configurable solver session to an
+admission-scheduled, wire-addressable solver service.
+
+The expensive parts of a node-aware AMG solve — the host ``Hierarchy``
+(setup phase), the lowered :class:`~repro.amg.dist_solve.DistHierarchy`
+(comm graphs, per-level strategy selection, halo plans) and its compiled
+shard_map programs — are built **once** per (matrix fingerprint, config)
+and amortized over many solves, the way a parallel AMG code builds its MPI
+communicators once (Bienz et al.'s communicator-reuse argument for
+node-aware SpMV).  This package is that amortization made operational,
+layered bottom-up:
+
+* :mod:`~repro.amg.api.config` — frozen, hashable :class:`AMGConfig` plus
+  the **versioned wire codec**: schema-tagged, unknown-key-rejecting
+  payloads for configs, CSR matrices (registered by content fingerprint)
+  and solve requests, so the service can be driven over a byte transport.
+* :mod:`~repro.amg.api.registry` — :func:`register_backend`; ``"host"``
+  (numpy reference) and ``"dist"`` (device-resident fused cycle) ship here
+  and future backends plug in without touching call sites.
+* :mod:`~repro.amg.api.sessions` — :class:`AMGSolver` /
+  :class:`BoundSolver` over an instantiable :class:`SessionStore` with
+  pluggable eviction (:class:`LRUPolicy`, :class:`TTLPolicy`, cost-aware
+  :class:`BytesBudgetPolicy`) and per-entry setup-cost / hit accounting.
+* :mod:`~repro.amg.api.service` — :class:`AMGService`, the serving
+  surface: ticketed async admission (``submit() -> Ticket``), cross-burst
+  multi-RHS coalescing windows, per-request ``tol``/``maxiter``/``x0``,
+  priority classes with starvation-free aging, and a
+  :class:`ServiceReport` of per-request diagnostics + store counters.
+  :class:`SolverEngine` survives as a deprecation shim over it.
+
+Surface::
+
+    cfg = AMGConfig(solver="rs", backend="dist", n_pods=2, lanes=4)
+    bound = AMGSolver(cfg).setup(A)      # cached per (matrix, config)
+    res = bound.solve(b)                 # b: [n] or [n, k] (multi-RHS)
+
+    svc = AMGService(cfg, coalesce_window=0.05)
+    mid = svc.register_wire(csr_to_wire(A))      # by fingerprint
+    with svc:                                    # admission worker
+        t = svc.submit(mid, b, method="pcg", priority="interactive")
+        x = t.result()
+    print(svc.report().summary())
+
+The cycle shape and smoother live in ``config.opts``
+(:class:`~repro.amg.solve.SolveOptions`) — they are *solve* knobs, so two
+configs that differ only there share one hierarchy and one dist lowering.
+"""
+from .config import (AMGConfig, WIRE_SCHEMA, WireError, array_from_wire,
+                     array_to_wire, csr_from_wire, csr_to_wire,
+                     matrix_fingerprint, solve_request_from_wire,
+                     solve_request_to_wire)
+from .registry import (available_backends, backend_class, bind_hierarchy,
+                       register_backend)
+from .sessions import (AMGSolver, BoundSolver, BytesBudgetPolicy, CacheEntry,
+                       DistBoundSolver, EvictionPolicy, HostBoundSolver,
+                       LRUPolicy, SESSION_CACHE_SIZE, SessionStore, TTLPolicy,
+                       clear_sessions, session_count, session_nbytes)
+from .service import (AMGService, PRIORITY_CLASSES, ServiceReport,
+                      SolveRequest, SolverEngine, Ticket)
+
+__all__ = [
+    "AMGConfig", "AMGService", "AMGSolver", "BoundSolver",
+    "BytesBudgetPolicy", "CacheEntry", "DistBoundSolver", "EvictionPolicy",
+    "HostBoundSolver", "LRUPolicy", "PRIORITY_CLASSES",
+    "SESSION_CACHE_SIZE", "ServiceReport", "SessionStore", "SolveRequest",
+    "SolverEngine", "TTLPolicy", "Ticket", "WIRE_SCHEMA", "WireError",
+    "array_from_wire", "array_to_wire", "available_backends",
+    "backend_class", "bind_hierarchy", "clear_sessions", "csr_from_wire",
+    "csr_to_wire", "matrix_fingerprint", "register_backend",
+    "session_count", "session_nbytes", "solve_request_from_wire",
+    "solve_request_to_wire",
+]

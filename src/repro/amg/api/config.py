@@ -1,0 +1,347 @@
+"""Solver-session configuration and the versioned wire codec.
+
+:class:`AMGConfig` is the frozen, hashable description of a full solver
+session (setup knobs, solve options, backend/mesh/strategy/kernel knobs) —
+hashability is what makes it a cache key for the session store.
+
+The **wire codec** makes the whole serving surface addressable over a
+byte-oriented transport: every payload is a plain JSON-serializable dict
+tagged with a ``schema`` version and a ``kind``.  Decoders are strict —
+a missing/mismatched schema version or any key the decoder does not know
+raises :class:`WireError` (corrupt or future-versioned payloads fail loudly
+instead of being half-applied):
+
+* ``AMGConfig.to_wire()`` / ``AMGConfig.from_wire()`` — config round-trip.
+* :func:`csr_to_wire` / :func:`csr_from_wire` — CSR matrix payloads
+  (base64-encoded little-endian arrays) carrying the content
+  :func:`matrix_fingerprint`, so a matrix can be registered *by fingerprint*
+  and later requests can address it by that id; decode re-verifies the
+  fingerprint as an integrity check.
+* :func:`solve_request_to_wire` / :func:`solve_request_from_wire` — one
+  solve admission (``b`` payload of shape ``[n]`` or ``[n, k]``, per-request
+  ``tol``/``maxiter``/``x0``/``priority``), consumed by
+  :meth:`~repro.amg.api.service.AMGService.submit_wire`.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from ..csr import CSR
+from ..solve import SolveOptions
+
+_DTYPES = ("float32", "float64", "bfloat16")
+
+WIRE_SCHEMA = 1
+
+
+class WireError(ValueError):
+    """A wire payload failed to decode (bad schema version, unknown key,
+    wrong kind, or a corrupt/fingerprint-mismatched body)."""
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AMGConfig:
+    """Frozen, hashable description of a full solver session: setup knobs,
+    smoother options, iteration defaults, and backend/mesh/strategy/kernel
+    knobs.  Hashability is what makes it a cache key — two configs that
+    compare equal always produce interchangeable solvers."""
+
+    # -- setup phase (Algorithm 1)
+    solver: str = "rs"                   # "rs" | "sa"
+    theta: float = 0.25
+    max_coarse: int = 100
+    max_levels: int = 25
+    aggressive: bool = False
+    prolongation_sweeps: int = 1
+    seed: int = 42
+    # "host": serial numpy setup; "dist": the partitioned node-aware setup
+    # (repro.amg.dist_setup) — levels are born partitioned and only the
+    # "dist" solve backend can consume them
+    setup_backend: str = "host"
+    # -- solve phase (Algorithm 2): cycle shape, smoother, sweep counts
+    # (pure solve knobs — sessions differing only here share setup+lowering)
+    opts: SolveOptions = dataclasses.field(default_factory=SolveOptions)
+    tol: float = 1e-8
+    maxiter: int = 100
+    pcg_maxiter: int = 200
+    # -- backend + mesh + strategy + kernel knobs
+    backend: str = "host"                # registry name: "host" | "dist" | …
+    n_pods: int = 1
+    lanes: int = 1
+    strategy: str = "auto"               # "auto" | "standard" | "nap2" | "nap3"
+    machine: str = "tpu_v5e"             # repro.core.MACHINES name
+    dtype: str = "float32"
+    use_kernel: bool | None = None       # None = auto (Pallas ELL on TPU)
+    interpret: bool | None = None        # None = auto (interpret off-TPU)
+    reduce_strategy: str = "nap3"        # norms/dots: "nap3" | "flat"
+
+    def __post_init__(self):
+        if self.dtype not in _DTYPES:
+            raise ValueError(f"dtype must be one of {_DTYPES}, "
+                             f"got {self.dtype!r}")
+        if self.setup_backend not in ("host", "dist"):
+            raise ValueError(f"setup_backend must be 'host' or 'dist', "
+                             f"got {self.setup_backend!r}")
+        if self.setup_backend == "dist" and self.backend != "dist":
+            raise ValueError(
+                "setup_backend='dist' births partitioned levels that only "
+                f"backend='dist' can consume (got backend={self.backend!r})")
+        if self.setup_backend == "dist" and self.solver != "rs":
+            raise ValueError(
+                "setup_backend='dist' supports solver='rs' only "
+                f"(got solver={self.solver!r})")
+        from ...core import MACHINES
+        if self.machine not in MACHINES:
+            raise ValueError(f"unknown machine {self.machine!r}; "
+                             f"known: {sorted(MACHINES)}")
+
+    def replace(self, **changes) -> "AMGConfig":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------ round-trip
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)       # recurses into opts
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AMGConfig":
+        d = dict(d)
+        opts = d.pop("opts", None)
+        if isinstance(opts, dict):
+            opts = SolveOptions(**opts)
+        return cls(opts=opts or SolveOptions(), **d)
+
+    # ------------------------------------------------------------------ wire
+    def to_wire(self) -> dict:
+        """JSON-serializable wire payload (``schema`` + ``kind`` tagged)."""
+        return {"schema": WIRE_SCHEMA, "kind": "amg_config", **self.to_dict()}
+
+    @classmethod
+    def from_wire(cls, payload: dict) -> "AMGConfig":
+        """Strict decode: wrong schema version, wrong ``kind`` or ANY key
+        not named by a config / :class:`SolveOptions` field raises
+        :class:`WireError`."""
+        body = _check_envelope(payload, "amg_config")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(body) - known
+        if unknown:
+            raise WireError(f"amg_config payload has unknown key(s) "
+                            f"{sorted(unknown)}; known: {sorted(known)}")
+        opts = body.get("opts")
+        if opts is not None:
+            if not isinstance(opts, dict):
+                raise WireError(f"amg_config opts must be a dict of "
+                                f"SolveOptions fields, got {type(opts)}")
+            oknown = {f.name for f in dataclasses.fields(SolveOptions)}
+            ounknown = set(opts) - oknown
+            if ounknown:
+                raise WireError(f"amg_config opts has unknown key(s) "
+                                f"{sorted(ounknown)}; known: {sorted(oknown)}")
+        try:
+            return cls.from_dict(body)
+        except (TypeError, ValueError) as e:
+            raise WireError(f"amg_config payload rejected: {e}") from e
+
+    # ------------------------------------------------------- derived kwargs
+    def setup_kwargs(self) -> dict:
+        return dict(solver=self.solver, theta=self.theta,
+                    max_coarse=self.max_coarse, max_levels=self.max_levels,
+                    aggressive=self.aggressive,
+                    prolongation_sweeps=self.prolongation_sweeps,
+                    seed=self.seed)
+
+    def dist_build_kwargs(self) -> dict:
+        """Kwargs for ``DistHierarchy.build`` (resolves machine + dtype)."""
+        import jax.numpy as jnp
+
+        from ...core import MACHINES
+        dtype = {"float32": jnp.float32, "float64": jnp.float64,
+                 "bfloat16": jnp.bfloat16}[self.dtype]
+        return dict(n_pods=self.n_pods, lanes=self.lanes,
+                    params=MACHINES[self.machine], strategy=self.strategy,
+                    dtype=dtype, use_kernel=self.use_kernel,
+                    interpret=self.interpret,
+                    reduce_strategy=self.reduce_strategy)
+
+
+def matrix_fingerprint(A: CSR) -> str:
+    """Content hash of a CSR matrix — the matrix half of the session key,
+    and the wire-level matrix id (:func:`csr_to_wire` registration)."""
+    h = hashlib.sha1()
+    h.update(np.asarray(A.shape, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(A.indptr).tobytes())
+    h.update(np.ascontiguousarray(A.indices).tobytes())
+    h.update(np.ascontiguousarray(A.data).tobytes())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# Wire primitives
+# --------------------------------------------------------------------------
+
+
+def _check_envelope(payload, kind: str) -> dict:
+    """Validate the ``schema``/``kind`` envelope; return the body (a copy
+    of the payload without the envelope keys)."""
+    if not isinstance(payload, dict):
+        raise WireError(f"wire payload must be a dict, got {type(payload)}")
+    schema = payload.get("schema")
+    if schema != WIRE_SCHEMA:
+        raise WireError(f"wire schema version mismatch: payload has "
+                        f"{schema!r}, this codec speaks {WIRE_SCHEMA}")
+    got = payload.get("kind")
+    if got != kind:
+        raise WireError(f"expected a {kind!r} payload, got kind={got!r}")
+    body = dict(payload)
+    body.pop("schema")
+    body.pop("kind")
+    return body
+
+
+# arrays travel as little-endian raw bytes, base64'd for JSON transport
+_WIRE_DTYPES = {"int64": "<i8", "float64": "<f8", "float32": "<f4"}
+
+
+def array_to_wire(a: np.ndarray, dtype: str | None = None) -> dict:
+    """Encode an array as ``{dtype, shape, data}`` (base64, little-endian).
+    ``dtype`` re-types on the way out (e.g. fp32 payloads for fp64 data —
+    half the bytes, the receiver sees the rounded values)."""
+    a = np.ascontiguousarray(a)
+    name = dtype or str(a.dtype)
+    if name not in _WIRE_DTYPES:
+        raise WireError(f"unsupported wire array dtype {name!r}; "
+                        f"supported: {sorted(_WIRE_DTYPES)}")
+    raw = a.astype(_WIRE_DTYPES[name]).tobytes()
+    return {"dtype": name, "shape": list(a.shape),
+            "data": base64.b64encode(raw).decode("ascii")}
+
+
+def array_from_wire(d: dict) -> np.ndarray:
+    unknown = set(d) - {"dtype", "shape", "data"}
+    if unknown:
+        raise WireError(f"array payload has unknown key(s) {sorted(unknown)}")
+    try:
+        wire_dtype = _WIRE_DTYPES[d["dtype"]]
+    except KeyError:
+        raise WireError(f"unsupported wire array dtype {d.get('dtype')!r}; "
+                        f"supported: {sorted(_WIRE_DTYPES)}") from None
+    try:
+        raw = base64.b64decode(d["data"], validate=True)
+        a = np.frombuffer(raw, dtype=wire_dtype)
+        return a.reshape(d["shape"]).astype(d["dtype"])
+    except (KeyError, ValueError, TypeError) as e:
+        raise WireError(f"corrupt array payload: {e}") from e
+
+
+def csr_to_wire(A: CSR, dtype: str = "float64") -> dict:
+    """Encode a CSR matrix for registration over the wire.
+
+    ``dtype`` controls the value payload ("float32" halves it; index arrays
+    stay int64).  The embedded ``fingerprint`` is computed over the matrix
+    **as the receiver will decode it** (i.e. after any value rounding), so
+    :func:`csr_from_wire` can verify integrity and the sender knows the id
+    the matrix will be registered under."""
+    data = A.data if dtype == "float64" else \
+        A.data.astype(dtype).astype(np.float64)
+    decoded = CSR(A.shape, np.ascontiguousarray(A.indptr),
+                  np.ascontiguousarray(A.indices), data)
+    return {"schema": WIRE_SCHEMA, "kind": "csr",
+            "shape": [int(A.nrows), int(A.ncols)],
+            "indptr": array_to_wire(A.indptr, "int64"),
+            "indices": array_to_wire(A.indices, "int64"),
+            "data": array_to_wire(A.data, dtype),
+            "fingerprint": matrix_fingerprint(decoded)}
+
+
+def csr_from_wire(payload: dict) -> tuple[CSR, str]:
+    """Decode a CSR payload; returns ``(matrix, fingerprint)``.
+
+    The fingerprint is recomputed from the decoded arrays and checked
+    against the payload's claim — a mismatch means transport corruption."""
+    body = _check_envelope(payload, "csr")
+    unknown = set(body) - {"shape", "indptr", "indices", "data",
+                           "fingerprint"}
+    if unknown:
+        raise WireError(f"csr payload has unknown key(s) {sorted(unknown)}")
+    try:
+        shape = (int(body["shape"][0]), int(body["shape"][1]))
+        A = CSR(shape=shape,
+                indptr=array_from_wire(body["indptr"]),
+                indices=array_from_wire(body["indices"]),
+                data=array_from_wire(body["data"]).astype(np.float64))
+    except (KeyError, IndexError, TypeError, ValueError) as e:
+        raise WireError(f"corrupt csr payload: {e}") from e
+    if A.indptr.shape != (shape[0] + 1,) or A.indices.shape != A.data.shape:
+        raise WireError(f"inconsistent csr payload: indptr {A.indptr.shape} "
+                        f"for {shape[0]} rows, indices {A.indices.shape} vs "
+                        f"data {A.data.shape}")
+    fp = matrix_fingerprint(A)
+    claimed = body.get("fingerprint")
+    if claimed is not None and claimed != fp:
+        raise WireError(f"csr payload fingerprint mismatch: payload claims "
+                        f"{claimed}, decoded content hashes to {fp}")
+    return A, fp
+
+
+_REQUEST_KEYS = {"matrix", "b", "method", "tol", "maxiter", "x0", "priority",
+                 "rid"}
+
+
+def solve_request_to_wire(matrix_id: str, b: np.ndarray, *,
+                          method: str = "solve", tol: float | None = None,
+                          maxiter: int | None = None,
+                          x0: np.ndarray | None = None,
+                          priority=None, rid: int | None = None) -> dict:
+    """Encode one solve admission (``b``: [n] or [n, k]) for
+    :meth:`~repro.amg.api.service.AMGService.submit_wire`."""
+    d = {"schema": WIRE_SCHEMA, "kind": "solve_request",
+         "matrix": matrix_id, "b": array_to_wire(np.asarray(b)),
+         "method": method}
+    if tol is not None:
+        d["tol"] = float(tol)
+    if maxiter is not None:
+        d["maxiter"] = int(maxiter)
+    if x0 is not None:
+        d["x0"] = array_to_wire(np.asarray(x0))
+    if priority is not None:
+        d["priority"] = priority
+    if rid is not None:
+        d["rid"] = int(rid)
+    return d
+
+
+def solve_request_from_wire(payload: dict) -> dict:
+    """Strict decode of a solve request; returns kwargs for
+    :meth:`AMGService.submit` (arrays materialized, unknown keys rejected)."""
+    body = _check_envelope(payload, "solve_request")
+    unknown = set(body) - _REQUEST_KEYS
+    if unknown:
+        raise WireError(f"solve_request payload has unknown key(s) "
+                        f"{sorted(unknown)}; known: {sorted(_REQUEST_KEYS)}")
+    try:
+        out = {"matrix_id": body["matrix"],
+               "b": array_from_wire(body["b"]),
+               "method": body.get("method", "solve")}
+    except KeyError as e:
+        raise WireError(f"solve_request payload missing {e.args[0]!r}") \
+            from None
+    if "tol" in body:
+        out["tol"] = float(body["tol"])
+    if "maxiter" in body:
+        out["maxiter"] = int(body["maxiter"])
+    if "x0" in body:
+        out["x0"] = array_from_wire(body["x0"])
+    if "priority" in body:
+        out["priority"] = body["priority"]
+    if "rid" in body:
+        out["rid"] = int(body["rid"])
+    return out

@@ -93,8 +93,10 @@ class DistLevel:
         ``kind="bj"``: inverse of the block-diagonal of the local block
         (``block_size`` grid restarting at the device's first row — blocks
         never straddle devices).  ``kind="gs"``: inverse of the local
-        (D + L) factor, i.e. hybrid forward Gauss-Seidel.  Padded/empty
-        diagonals become 1 so padded rows update by exactly zero.
+        (D + L) factor, i.e. hybrid forward Gauss-Seidel; ``kind="gsu"``:
+        the (D + U) inverse for the backward half of the symmetric sweep.
+        Padded/empty diagonals become 1 so padded rows update by exactly
+        zero.
         """
         key = (kind, block_size)
         got = self._minv_cache.get(key)
@@ -112,6 +114,8 @@ class DistLevel:
                 dense = np.where(same, dense, 0.0)
             elif kind == "gs":
                 dense = np.tril(dense)
+            elif kind == "gsu":
+                dense = np.triu(dense)
             else:
                 raise ValueError(f"unknown smoother factor kind {kind!r}")
             diag = np.diagonal(dense).copy()
@@ -391,6 +395,14 @@ class DistHierarchy:
             for _ in range(sweeps):
                 x = x + w * (minv @ (b - self._spmv(dl.A, aA, x)))
             return x
+        if opts.smoother == "hybrid_gs_sym":
+            # forward (D+L)⁻¹ then backward (D+U)⁻¹ half-sweep, each with a
+            # freshly halo'd residual — 2 SpMVs/sweep, symmetric smoother
+            minv, minv_u = arrs["minv"], arrs["minv_u"]
+            for _ in range(sweeps):
+                x = x + (minv @ (b - self._spmv(dl.A, aA, x)))
+                x = x + (minv_u @ (b - self._spmv(dl.A, aA, x)))
+            return x
         # Chebyshev via the recurrence shared with the host backend, the
         # matvec swapped for the level's distributed SpMV
         degree = opts.cheby_degree * sweeps
@@ -423,12 +435,19 @@ class DistHierarchy:
         return x
 
     # ------------------------------------------------------------- programs
+    # extra dense factors per smoother: array name -> minv kind
+    _MINV_ARRS = {"bj": (("minv", "bj"),),
+                  "gs": (("minv", "gs"),),
+                  "gs_sym": (("minv", "gs"), ("minv_u", "gsu"))}
+
     def _smoother_arrs_key(self, opts) -> tuple | None:
         """Key of the extra lowered arrays ``opts``'s smoother needs."""
         if opts.smoother == "block_jacobi":
             return ("bj", opts.block_size)
         if opts.smoother == "hybrid_gs":
             return ("gs", 0)
+        if opts.smoother == "hybrid_gs_sym":
+            return ("gs_sym", 0)
         return None
 
     def run_arrays(self, opts) -> list:
@@ -448,8 +467,9 @@ class DistHierarchy:
             for dl, base in zip(self.levels, self._arrs):
                 a = dict(base)
                 if dl.coarse_inv is None:
-                    mv = dl.smoother_minv(*key).astype(self.dtype)
-                    a["minv"] = jax.device_put(mv, self._sharding)
+                    for name, kind in self._MINV_ARRS[key[0]]:
+                        mv = dl.smoother_minv(kind, key[1]).astype(self.dtype)
+                        a[name] = jax.device_put(mv, self._sharding)
                 got.append(a)
             self._arrs_ex[key] = got
         return got
@@ -709,7 +729,7 @@ def dist_vcycle(dh: DistHierarchy, b: np.ndarray, opts=None) -> np.ndarray:
     """One device-resident cycle (``opts.cycle`` shape) from a zero initial
     guess (``b``: [n] or [n, k])."""
     opts = opts or SolveOptions()
-    b = np.asarray(b, dtype=np.float64)
+    b = np.asarray(b)  # staged by BoundSolver._check_b; keep dtype
     progs, arrs = dh.programs(opts)
     bd = dh.scatter(b)
     prog = progs["vcycle_m" if b.ndim == 2 else "vcycle"]
@@ -747,7 +767,7 @@ def dist_solve(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
     converges.
     """
     opts = opts or SolveOptions()
-    b = np.asarray(b, dtype=np.float64)
+    b = np.asarray(b)  # staged by BoundSolver._check_b; keep dtype
     multi = b.ndim == 2
     progs, arrs = dh.programs(opts)
     bd = dh.scatter(b)
@@ -779,7 +799,7 @@ def dist_pcg(dh: DistHierarchy, b: np.ndarray, tol: float = 1e-8,
     Supports ``x0=`` warm starts and multi-RHS ``b`` of shape ``[n, k]``.
     """
     opts = opts or SolveOptions()
-    b = np.asarray(b, dtype=np.float64)
+    b = np.asarray(b)  # staged by BoundSolver._check_b; keep dtype
     multi = b.ndim == 2
     progs, arrs = dh.programs(opts)
     bd = dh.scatter(b)

@@ -13,6 +13,9 @@ Pointwise smoothers — weighted/l1-Jacobi and Chebyshev — plus the two
   exactly the halo'd off-process values).  This is the processor-block
   Gauss-Seidel of parallel AMG codes: its iteration depends on the row
   partition, so the host reference takes the part boundaries explicitly.
+* :func:`hybrid_gs_sym` — the symmetric sweep (forward + backward, each
+  against a freshly lagged residual): 2 SpMVs/sweep, but the resulting
+  cycle is a symmetric operator, i.e. an SPD preconditioner for PCG.
 
 Every sweep of every smoother is SpMV-based, so the communication pattern
 is identical to A·x and every sweep uses the level's selected node-aware
@@ -92,6 +95,35 @@ def block_jacobi(A: CSR, x: np.ndarray, b: np.ndarray, block_size: int = 4,
     return x
 
 
+def _resolve_bounds(n: int, boundaries) -> np.ndarray:
+    return (np.array([0, n], dtype=np.int64) if boundaries is None
+            else np.asarray(boundaries, dtype=np.int64))
+
+
+def _hybrid_sweep(A: CSR, x: np.ndarray, b: np.ndarray, bounds: np.ndarray,
+                  forward: bool) -> np.ndarray:
+    """One directional hybrid sweep: solve ``(D + T_part) z = b − A x`` per
+    contiguous row part (T = strictly-lower triangle for a forward sweep,
+    strictly-upper for a backward one; couplings to rows outside the part
+    enter through the lagged residual) and return ``x + z``."""
+    r = b - A.matvec(x)
+    z = np.zeros_like(x)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        lo, hi = int(lo), int(hi)
+        order = range(lo, hi) if forward else range(hi - 1, lo - 1, -1)
+        for i in order:
+            s, e = int(A.indptr[i]), int(A.indptr[i + 1])
+            cols, vals = A.indices[s:e], A.data[s:e]
+            if forward:
+                in_part = (cols >= lo) & (cols < i)
+            else:
+                in_part = (cols > i) & (cols < hi)
+            acc = r[i] - vals[in_part] @ z[cols[in_part]]
+            diag = float(vals[cols == i].sum()) or 1.0
+            z[i] = acc / diag
+    return x + z
+
+
 def hybrid_gs(A: CSR, x: np.ndarray, b: np.ndarray,
               boundaries: np.ndarray | None = None,
               iterations: int = 1) -> np.ndarray:
@@ -105,21 +137,30 @@ def hybrid_gs(A: CSR, x: np.ndarray, b: np.ndarray,
     forward Gauss-Seidel; with the device partition's boundaries it is
     bit-for-bit the distributed backend's smoother.
     """
-    n = A.nrows
-    bounds = (np.array([0, n], dtype=np.int64) if boundaries is None
-              else np.asarray(boundaries, dtype=np.int64))
+    bounds = _resolve_bounds(A.nrows, boundaries)
     for _ in range(iterations):
-        r = b - A.matvec(x)
-        z = np.zeros_like(x)
-        for lo, hi in zip(bounds[:-1], bounds[1:]):
-            for i in range(int(lo), int(hi)):
-                s, e = int(A.indptr[i]), int(A.indptr[i + 1])
-                cols, vals = A.indices[s:e], A.data[s:e]
-                in_part = (cols >= lo) & (cols < i)
-                acc = r[i] - vals[in_part] @ z[cols[in_part]]
-                diag = float(vals[cols == i].sum()) or 1.0
-                z[i] = acc / diag
-        x = x + z
+        x = _hybrid_sweep(A, x, b, bounds, forward=True)
+    return x
+
+
+def hybrid_gs_sym(A: CSR, x: np.ndarray, b: np.ndarray,
+                  boundaries: np.ndarray | None = None,
+                  iterations: int = 1) -> np.ndarray:
+    """Symmetric-sweep hybrid Gauss-Seidel: one forward hybrid sweep
+    followed by one backward hybrid sweep (each with a freshly lagged
+    residual, so the backward half costs a second SpMV).
+
+    The symmetric sweep makes the smoother — and hence the whole
+    V-cycle — a *symmetric* operator for symmetric A, which is what PCG
+    needs from its preconditioner; plain ``hybrid_gs`` is not.  With
+    ``boundaries=[0, n]`` this is textbook symmetric Gauss-Seidel; with
+    the device partition's boundaries it is bit-for-bit the distributed
+    backend's smoother (off-part values halo'd, i.e. lagged).
+    """
+    bounds = _resolve_bounds(A.nrows, boundaries)
+    for _ in range(iterations):
+        x = _hybrid_sweep(A, x, b, bounds, forward=True)
+        x = _hybrid_sweep(A, x, b, bounds, forward=False)
     return x
 
 

@@ -20,7 +20,10 @@ smoother ``"jacobi"`` weighted point Jacobi (1 SpMV/sweep);
          ``block_size`` (1 SpMV/sweep, denser local update);
          ``"hybrid_gs"`` hybrid Gauss-Seidel — exact forward GS within a
          row part, Jacobi across parts with lagged (halo'd) off-part
-         values (1 SpMV/sweep).
+         values (1 SpMV/sweep);
+         ``"hybrid_gs_sym"`` the symmetric sweep (forward + backward,
+         2 SpMVs/sweep) — a symmetric smoother, so the cycle is an SPD
+         preconditioner for PCG with every backend.
 ======== =================================================================
 
 The block smoothers' iterations depend on the row partition: the dist
@@ -56,10 +59,11 @@ import numpy as np
 from .csr import CSR
 from .hierarchy import Hierarchy, Level
 from .smoothers import (balanced_offsets, block_diag_inv, block_jacobi,
-                        chebyshev, hybrid_gs, jacobi)
+                        chebyshev, hybrid_gs, hybrid_gs_sym, jacobi)
 
 CYCLES = ("V", "W", "F")
-SMOOTHERS = ("jacobi", "chebyshev", "block_jacobi", "hybrid_gs")
+SMOOTHERS = ("jacobi", "chebyshev", "block_jacobi", "hybrid_gs",
+             "hybrid_gs_sym")
 # recursive coarse visits per cycle shape: each child runs at level+1,
 # warm-started from the previous child's result
 CYCLE_CHILDREN = {"V": ("V",), "W": ("W", "W"), "F": ("F", "V")}
@@ -94,7 +98,9 @@ class SolveOptions:
 
     def spmvs_per_sweep(self) -> int:
         """SpMVs one relaxation sweep costs (the comm-count multiplier)."""
-        return self.cheby_degree if self.smoother == "chebyshev" else 1
+        if self.smoother == "chebyshev":
+            return self.cheby_degree
+        return 2 if self.smoother == "hybrid_gs_sym" else 1
 
 
 def _relax(A: CSR, x, b, opts: SolveOptions, sweeps: int,
@@ -114,9 +120,10 @@ def _relax(A: CSR, x, b, opts: SolveOptions, sweeps: int,
                 level.smoother_cache[key] = binv
         return block_jacobi(A, x, b, opts.block_size, omega=opts.omega,
                             iterations=sweeps, binv=binv)
-    if opts.smoother == "hybrid_gs":
+    if opts.smoother in ("hybrid_gs", "hybrid_gs_sym"):
         bounds = balanced_offsets(A.nrows, opts.smoother_parts)
-        return hybrid_gs(A, x, b, boundaries=bounds, iterations=sweeps)
+        fn = hybrid_gs if opts.smoother == "hybrid_gs" else hybrid_gs_sym
+        return fn(A, x, b, boundaries=bounds, iterations=sweeps)
     return chebyshev(A, x, b, degree=opts.cheby_degree * sweeps)
 
 

@@ -7,18 +7,24 @@ Two engines share this entrypoint:
 
       PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced
 
-* ``--solver amg`` — the AMG :class:`~repro.amg.api.SolverEngine`: a stream
-  of ``(matrix_id, b)`` solve requests drained against the hierarchy
-  session cache, same-matrix right-hand sides batched through one
-  multi-RHS device trace::
+* ``--solver amg`` — the :class:`~repro.amg.api.AMGService`: solve
+  requests admitted through tickets, same-(matrix, knobs) right-hand
+  sides coalesced into one multi-RHS device trace.  ``--coalesce-window``
+  (seconds, > 0) runs the background admission worker so requests
+  submitted in separate bursts coalesce; ``--wire`` drives the service
+  purely through the versioned wire codec — matrices registered by
+  fingerprint from encoded CSR payloads, every request an encoded dict
+  passed through an actual JSON byte hop (the codec round-trip proven
+  end-to-end)::
 
       PYTHONPATH=src python -m repro.launch.serve --solver amg --requests 16
-      PYTHONPATH=src python -m repro.launch.serve --solver amg \\
-          --amg-backend dist --n 10
+      PYTHONPATH=src python -m repro.launch.serve --solver amg --wire \\
+          --amg-backend dist --n 10 --coalesce-window 0.2
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -56,7 +62,8 @@ def run_lm(args):
 def run_amg(args):
     import numpy as np
 
-    from ..amg.api import AMGConfig, SolveRequest, SolverEngine
+    from ..amg.api import (AMGConfig, AMGService, csr_to_wire,
+                           solve_request_to_wire)
     from ..amg.problems import laplace_3d
 
     # the dist backend defaults to fp32, whose residual floor (~1e-7
@@ -66,37 +73,57 @@ def run_amg(args):
         1e-6 if args.amg_backend == "dist" else 1e-8)
     cfg = AMGConfig(backend=args.amg_backend, n_pods=args.n_pods,
                     lanes=args.lanes, tol=tol)
-    eng = SolverEngine(cfg, max_rhs=args.batch)
+    svc = AMGService(cfg, max_rhs=args.batch,
+                     coalesce_window=args.coalesce_window)
     sizes = (args.n, max(4, args.n - 2))
     mats = {}
     for n in sizes:
-        mid = f"laplace3d_n{n}"
-        mats[mid] = laplace_3d(n)
-        eng.add_matrix(mid, mats[mid])
+        A = laplace_3d(n)
+        if args.wire:
+            # wire-only operation: the matrix id IS the verified content
+            # fingerprint of the encoded payload (one real JSON byte hop)
+            mid = svc.register_wire(json.loads(json.dumps(csr_to_wire(A))))
+        else:
+            mid = svc.register(f"laplace3d_n{n}", A)
+        mats[mid] = A
     ids = sorted(mats)
     rng = np.random.default_rng(0)
-    reqs = []
-    for rid in range(args.requests):
+
+    def admit(rid):
         mid = ids[rid % len(ids)]
         b = rng.standard_normal(mats[mid].nrows)
-        reqs.append(SolveRequest(rid=rid, matrix_id=mid, b=b,
-                                 method=args.method))
-        eng.submit(reqs[-1])
+        if args.wire:
+            payload = json.loads(json.dumps(solve_request_to_wire(
+                mid, b, method=args.method, rid=rid)))
+            ticket = svc.submit_wire(payload)
+        else:
+            ticket = svc.submit(mid, b, method=args.method, rid=rid)
+        return mid, b, ticket
+
     t0 = time.perf_counter()
-    out = eng.run()
+    admitted = [admit(rid) for rid in range(args.requests)]
+    if args.coalesce_window > 0:
+        with svc:                       # background admission worker
+            out = {t.rid: t.result(timeout=600) for _, _, t in admitted}
+    else:
+        out = svc.drain()
     dt = time.perf_counter() - t0
     worst = 0.0
-    for req in reqs:
-        A = mats[req.matrix_id]
-        rel = (np.linalg.norm(req.b - A.matvec(out[req.rid]))
-               / np.linalg.norm(req.b))
+    for mid, b, ticket in admitted:
+        A = mats[mid]
+        rel = (np.linalg.norm(b - A.matvec(out[ticket.rid]))
+               / np.linalg.norm(b))
         worst = max(worst, rel)
-    s = eng.stats
+    s = svc.stats
+    mode = "wire" if args.wire else "direct"
     print(f"[serve/amg] {len(out)} solves ({len(ids)} matrices, "
-          f"backend={args.amg_backend}) in {dt:.2f}s: "
+          f"backend={args.amg_backend}, {mode}, "
+          f"window={args.coalesce_window}s) in {dt:.2f}s: "
           f"{len(out) / dt:.1f} solves/s, {s['batches']} batches "
-          f"({s['batched_rhs']} RHS batched), {s['setups']} setups, "
-          f"{s['unconverged']} unconverged, worst rel residual {worst:.2e}")
+          f"({s['batched_rhs']} RHS batched, {s['wire_requests']} wire), "
+          f"{s['setups']} setups, {s['unconverged']} unconverged, "
+          f"worst rel residual {worst:.2e}")
+    print("[serve/amg] " + svc.report().summary().replace("\n", "\n[serve/amg] "))
     if worst > tol * 100:
         raise SystemExit(f"residual check failed: {worst:.2e}")
 
@@ -123,6 +150,14 @@ def main():
                     help="convergence tolerance (default 1e-8 host, "
                          "1e-6 dist/fp32)")
     ap.add_argument("--method", choices=("solve", "pcg"), default="pcg")
+    ap.add_argument("--wire", action="store_true",
+                    help="drive the AMG service purely through encoded "
+                         "wire payloads (matrices registered by "
+                         "fingerprint, requests JSON round-tripped)")
+    ap.add_argument("--coalesce-window", type=float, default=0.0,
+                    help="seconds the admission worker holds a group open "
+                         "to coalesce same-matrix RHS across bursts "
+                         "(0 = synchronous drain)")
     args = ap.parse_args()
 
     if args.solver == "amg":

@@ -82,10 +82,19 @@ class Engine:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _sample(self, logits, temperature, key):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / temperature, axis=-1)
+    def _sample(self, logits, temperatures, key):
+        """Per-row sampling for a [B, V] logits batch: rows with
+        temperature <= 0 take the greedy argmax, the rest draw from
+        logits/T with their OWN temperature (requests in one batch are
+        independent — one request's sampling mode must not leak into its
+        batchmates')."""
+        greedy = jnp.argmax(logits, axis=-1)
+        if not np.any(temperatures > 0.0):
+            return greedy
+        temps = jnp.asarray(temperatures, dtype=logits.dtype)
+        scaled = logits / jnp.where(temps > 0.0, temps, 1.0)[:, None]
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+        return jnp.where(temps > 0.0, sampled, greedy)
 
     def run(self, key=None) -> dict[int, np.ndarray]:
         """Drain the queue; returns {rid: generated tokens}."""
@@ -115,7 +124,8 @@ class Engine:
                                         self.dtype)
         self.stats["prefill_s"] += time.perf_counter() - t0
         max_new = max(r.max_new_tokens for r in reqs)
-        toks = self._sample(logits[:, -1], reqs[0].temperature, key)
+        temps = np.array([r.temperature for r in reqs], np.float32)
+        toks = self._sample(logits[:, -1], temps, key)
         outs = [toks]
         t0 = time.perf_counter()
         for t in range(max_new - 1):
@@ -125,7 +135,7 @@ class Engine:
             lg, cache = self._decode(self.params, step_in, cache,
                                      jnp.int32(S + t))
             key = jax.random.fold_in(key, t)
-            toks = self._sample(lg, reqs[0].temperature, key)
+            toks = self._sample(lg, temps, key)
             outs.append(toks)
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["tokens"] += int(max_new) * B

@@ -77,10 +77,11 @@ def main():
     assert history_diff(ch.residuals, cd.residuals) < TOL
     print("OK chebyshev")
 
-    # EVERY (cycle, smoother) pair as ONE fused fp64 shard_map program on
-    # the 2x4 mesh, ≤1e-7 residual parity with the host reference (block
-    # smoothers: the host mimics the 8-device partition) and a monotone
-    # 5-iteration residual decline — the dist half of the property test
+    # EVERY (cycle, smoother) pair — including the symmetric-sweep hybrid
+    # GS — as ONE fused fp64 shard_map program on the 2x4 mesh, ≤1e-7
+    # residual parity with the host reference (block smoothers: the host
+    # mimics the 8-device partition) and a monotone 5-iteration residual
+    # decline — the dist half of the property test
     h3 = setup(A, solver="rs", max_coarse=30)   # ≥3 levels so W/F differ
     assert h3.n_levels >= 3, h3.n_levels
     dh64 = DistHierarchy.build(h3, N_PODS, LANES, params=BLUE_WATERS,
@@ -103,6 +104,50 @@ def main():
         (stV, stW)
     print("OK cycle_smoother_parity")
 
+    # the symmetric hybrid GS sweep is an SPD preconditioner: dist PCG with
+    # it converges on the 2x4 mesh and matches the host PCG history ≤1e-7
+    osym = SolveOptions(smoother="hybrid_gs_sym",
+                        smoother_parts=N_PODS * LANES)
+    ph = pcg(h3, b, tol=1e-8, maxiter=30, opts=osym)
+    pd = pcg(h3, b, tol=1e-8, maxiter=30, opts=osym, backend="dist",
+             dist=dh64)
+    assert ph.converged and pd.converged, (ph.iterations, pd.iterations)
+    assert history_diff(ph.residuals, pd.residuals) < 1e-7
+    # 2 SpMVs/sweep lands in the modeled comm counts
+    assert (cycle_comm_stats(dh64, osym)["inter_msgs"]
+            > cycle_comm_stats(dh64, SolveOptions(smoother="hybrid_gs"))
+            ["inter_msgs"])
+    print("OK hybrid_gs_sym_pcg")
+
+    # AMGService cross-burst coalescing on the 2x4 mesh: k same-matrix
+    # requests submitted in separate bursts inside one window must ride
+    # ONE multi-RHS device trace and match per-request host solves ≤1e-7
+    import time as _time
+
+    from repro.amg import AMGService
+
+    svc = AMGService(AMGConfig(backend="dist", n_pods=N_PODS, lanes=LANES,
+                               machine="blue_waters", dtype="float64"),
+                     max_rhs=8, coalesce_window=1.5)
+    svc.register("lap", A)
+    rng = np.random.default_rng(11)
+    bs = [b] + [rng.standard_normal(A.nrows) for _ in range(2)]
+    with svc:
+        tickets = []
+        for bi in bs:                       # three separate bursts
+            tickets.append(svc.submit("lap", bi, method="solve", tol=0.0,
+                                      maxiter=12))
+            _time.sleep(0.05)
+        xs = [t.result(timeout=300) for t in tickets]
+    assert svc.stats["batches"] == 1, svc.stats     # ONE device trace
+    assert svc.stats["batched_rhs"] == len(bs), svc.stats
+    for bi, xi, t in zip(bs, xs, tickets):
+        href = solve(h, bi, tol=0.0, maxiter=12)
+        xd = np.linalg.norm(xi - href.x) / np.linalg.norm(href.x)
+        assert xd < 1e-7, (t.rid, xd)
+        assert t.diagnostics["batch_cols"] == len(bs)
+    print("OK service_cross_burst_coalescing")
+
     # the setup_backend="dist" session (hierarchy=None, levels born
     # partitioned) drives the same W-cycle + block-Jacobi fused program
     cfg_w = AMGConfig(setup_backend="dist", backend="dist", n_pods=N_PODS,
@@ -119,6 +164,9 @@ def main():
     # fp64 AMGSolver session: a [n, 4] multi-RHS dist solve batched through
     # one device trace matches 4 independent host solves to 1e-7 relative
     # residual (the PR-1 parity bar), with ONE DistHierarchy build.
+    from repro.amg.api import clear_sessions
+
+    clear_sessions()      # the service above shared this config's setup
     builds = []
     orig_build = DistHierarchy.build.__func__
     DistHierarchy.build = classmethod(

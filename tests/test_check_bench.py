@@ -64,6 +64,38 @@ def test_levels_mismatch_fails(tmp_path):
     assert run(tmp_path, base, [row("a", "levels=2;conv=0.2")]) == 1
 
 
+def test_serving_rows_gate_presence_and_divergence_only(tmp_path):
+    """Serving rows: throughput (solves_per_s) may move freely — only a
+    missing row, a diverged worst_rel, or new unconverged solves fail."""
+    base = [row("serve_coalesced_host",
+                "backend=host;requests=4;solves_per_s=120.0;batches=1;"
+                "worst_rel=3.1e-09;unconverged=0")]
+    # 100x slower serving still passes (wall-clock derived, not gated)
+    ok = [row("serve_coalesced_host",
+              "backend=host;requests=4;solves_per_s=1.2;batches=1;"
+              "worst_rel=8.0e-07;unconverged=0")]
+    assert run(tmp_path, base, ok) == 0
+    # a diverged residual fails
+    bad = [row("serve_coalesced_host",
+               "backend=host;requests=4;solves_per_s=120.0;batches=1;"
+               "worst_rel=2.5e+00;unconverged=0")]
+    assert run(tmp_path, base, bad) == 1
+    # fresh unconverged solves fail when the baseline had none
+    unc = [row("serve_coalesced_host",
+               "backend=host;requests=4;solves_per_s=120.0;batches=1;"
+               "worst_rel=3.1e-09;unconverged=2")]
+    assert run(tmp_path, base, unc) == 1
+    # a missing serving row fails (presence)
+    assert run(tmp_path, base, [row("other", "conv=0.2")]) == 1
+    # a NaN residual must parse and fail — it cannot hide from the gate
+    nan = [row("serve_coalesced_host",
+               "backend=host;requests=4;solves_per_s=120.0;batches=1;"
+               "worst_rel=nan;unconverged=0")]
+    assert check_bench.parse_derived(nan[0]["derived"])["worst_rel"] != \
+        check_bench.parse_derived(nan[0]["derived"])["worst_rel"]  # is NaN
+    assert run(tmp_path, base, nan) == 1
+
+
 def test_no_overlap_fails(tmp_path):
     base = [row("a_n4096", "conv=0.25")]
     assert run(tmp_path, base, [row("a_n512", "conv=0.25")]) == 1

@@ -15,7 +15,8 @@ from repro.amg import SolveOptions, setup, solve
 from repro.amg.csr import CSR
 from repro.amg.problems import laplace_3d_7pt
 from repro.amg.smoothers import (balanced_offsets, block_diag_inv,
-                                 block_jacobi, block_partition, hybrid_gs)
+                                 block_jacobi, block_partition, hybrid_gs,
+                                 hybrid_gs_sym)
 from repro.amg.solve import (CYCLE_CHILDREN, CYCLES, SMOOTHERS, host_cycle,
                              host_pcg, level_visits)
 
@@ -146,6 +147,75 @@ def test_hybrid_gs_parts_match_blockwise_solve():
         M = np.tril(dense[lo:hi, lo:hi])
         ref[lo:hi] = np.linalg.solve(M, b[lo:hi])
     np.testing.assert_allclose(x, ref, rtol=1e-11)
+
+
+def test_hybrid_gs_sym_single_part_is_textbook_sgs():
+    """boundaries=[0,n]: one sweep must equal forward GS then backward GS,
+    each against a freshly recomputed residual."""
+    A = laplace_3d_7pt(4)
+    rng = np.random.default_rng(13)
+    b = rng.standard_normal(A.nrows)
+    x = hybrid_gs_sym(A, np.zeros_like(b), b)
+    dense = A.to_dense()
+    L = np.tril(dense)                     # D + strictly lower
+    U = np.triu(dense)                     # D + strictly upper
+    ref = np.linalg.solve(L, b)            # forward half from x=0
+    ref = ref + np.linalg.solve(U, b - dense @ ref)   # backward half
+    np.testing.assert_allclose(x, ref, rtol=1e-11)
+
+
+def test_hybrid_gs_sym_parts_match_blockwise_tri_solves():
+    """With k parts each half-sweep equals x + blockdiag(D+T)⁻¹ (b − A x)."""
+    A = laplace_3d_7pt(4)
+    rng = np.random.default_rng(14)
+    b = rng.standard_normal(A.nrows)
+    bounds = balanced_offsets(A.nrows, 3)
+    x = hybrid_gs_sym(A, np.zeros_like(b), b, boundaries=bounds)
+    dense = A.to_dense()
+    ref = np.zeros_like(b)
+    for tri in (np.tril, np.triu):
+        r = b - dense @ ref
+        z = np.zeros_like(b)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            M = tri(dense[lo:hi, lo:hi])
+            z[lo:hi] = np.linalg.solve(M, r[lo:hi])
+        ref = ref + z
+    np.testing.assert_allclose(x, ref, rtol=1e-11)
+
+
+def test_hybrid_gs_sym_cycle_is_spd_preconditioner():
+    """The cycle with the symmetric smoother is a symmetric positive
+    definite operator (what PCG requires); the forward-only hybrid GS
+    cycle is not symmetric — that asymmetry is the gap this smoother
+    closes."""
+    A = laplace_3d_7pt(4)
+    h = setup(A, solver="rs", max_coarse=20)
+    n = A.nrows
+
+    def cycle_matrix(opts):
+        M = np.zeros((n, n))
+        for i in range(n):
+            e = np.zeros(n)
+            e[i] = 1.0
+            M[:, i] = host_cycle(h, e, None, opts)
+        return M
+
+    Msym = cycle_matrix(SolveOptions(smoother="hybrid_gs_sym"))
+    scale = np.abs(Msym).max()
+    assert np.abs(Msym - Msym.T).max() < 1e-12 * scale
+    assert np.linalg.eigvalsh(0.5 * (Msym + Msym.T)).min() > 0
+    Mfwd = cycle_matrix(SolveOptions(smoother="hybrid_gs"))
+    assert np.abs(Mfwd - Mfwd.T).max() > 1e-6 * np.abs(Mfwd).max()
+    # and PCG with the SPD preconditioner converges cleanly
+    b = A.matvec(np.ones(n))
+    res = host_pcg(h, b, tol=1e-10, maxiter=40,
+                   opts=SolveOptions(smoother="hybrid_gs_sym"))
+    assert res.converged
+
+
+def test_hybrid_gs_sym_costs_two_spmvs_per_sweep():
+    assert SolveOptions(smoother="hybrid_gs_sym").spmvs_per_sweep() == 2
+    assert SolveOptions(smoother="hybrid_gs").spmvs_per_sweep() == 1
 
 
 def test_host_pcg_refactor_matches_reference_history():

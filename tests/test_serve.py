@@ -59,3 +59,36 @@ def test_engine_batched_generation():
     out2 = eng2.run()
     for rid in out:
         np.testing.assert_array_equal(out[rid], out2[rid])
+
+
+def test_engine_mixed_temperature_batch_honors_each_request():
+    """Regression: _run_batch used to apply reqs[0].temperature to the whole
+    batch — a greedy request batched after a sampled one came back sampled.
+    Greedy requests must decode identically whether batched with sampled
+    requests or alone, and the whole mixed batch must be deterministic."""
+    cfg = get_arch("qwen2-0.5b").reduced(n_layers=2, d_model=32, n_heads=4,
+                                         vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, 10, dtype=np.int32)
+               for _ in range(3)]
+
+    def run(temps, max_batch):
+        eng = Engine(cfg, params, max_batch=max_batch, ctx_len=64)
+        for rid, (p, t) in enumerate(zip(prompts, temps)):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6,
+                               temperature=t))
+        return eng.run()
+
+    # sampled request FIRST: under the old bug its temperature leaked onto
+    # the greedy batchmates
+    mixed = run([1.5, 0.0, 0.0], max_batch=3)
+    # reference: the same 3-request batch, all greedy — rows 1 and 2 see
+    # bit-identical logits, so their tokens must match exactly
+    greedy = run([0.0] * 3, max_batch=3)
+    for rid in (1, 2):
+        np.testing.assert_array_equal(mixed[rid], greedy[rid])
+    # mixed-batch decoding stays deterministic (same PRNG path)
+    again = run([1.5, 0.0, 0.0], max_batch=3)
+    for rid in range(3):
+        np.testing.assert_array_equal(mixed[rid], again[rid])

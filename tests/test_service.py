@@ -1,0 +1,351 @@
+"""AMGService tests: ticketed admission, coalescing, per-request knobs,
+priority scheduling, wire-only operation, and session-store accounting.
+
+The 8-device cross-burst coalescing + 1e-7 parity acceptance check runs in
+the ``dist_solve_script.py`` subprocess; everything here stays on this
+process (host backend / 1x1 mesh) where it can be deterministic.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.amg import AMGConfig, AMGService, SolveOptions
+from repro.amg.api import (BytesBudgetPolicy, SessionStore, clear_sessions,
+                           csr_to_wire, solve_request_to_wire)
+from repro.amg.api.service import _Group, _Pending
+from repro.amg.problems import laplace_3d
+
+
+@pytest.fixture(autouse=True)
+def _fresh_sessions():
+    clear_sessions()
+    yield
+    clear_sessions()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A = laplace_3d(6)
+    b = A.matvec(np.ones(A.nrows))
+    return A, b
+
+
+def _service(config=None, **kw):
+    svc = AMGService(config or AMGConfig(), **kw)
+    return svc
+
+
+# ------------------------------------------------------------- admission
+def test_submit_validation(problem):
+    A, b = problem
+    svc = _service()
+    svc.register("m", A)
+    with pytest.raises(KeyError, match="unknown matrix_id"):
+        svc.submit("nope", b)
+    with pytest.raises(ValueError, match="unknown method"):
+        svc.submit("m", b, method="gmres")
+    with pytest.raises(ValueError, match="b must be"):
+        svc.submit("m", b[:-1])
+    with pytest.raises(ValueError, match="x0 must match"):
+        svc.submit("m", b, x0=np.zeros(3))
+    with pytest.raises(ValueError, match="unknown priority class"):
+        svc.submit("m", b, priority="urgent")
+
+
+def test_ticket_requires_worker_or_drain(problem):
+    A, b = problem
+    svc = _service()
+    svc.register("m", A)
+    t = svc.submit("m", b)
+    assert not t.done()
+    with pytest.raises(RuntimeError, match="drain"):
+        t.result(timeout=0.1)
+    out = svc.drain()
+    assert t.done()
+    np.testing.assert_array_equal(t.result(), out[t.rid])
+
+
+def test_drain_groups_by_compatible_knobs(problem):
+    """Same (matrix, method, tol, maxiter) coalesces into one trace;
+    a request with its own tol gets its own group/batch."""
+    A, b = problem
+    rng = np.random.default_rng(0)
+    svc = _service(max_rhs=8)
+    svc.register("m", A)
+    for _ in range(3):
+        svc.submit("m", rng.standard_normal(A.nrows), method="pcg")
+    loose = svc.submit("m", rng.standard_normal(A.nrows), method="pcg",
+                       tol=1e-3)
+    out = svc.drain()
+    assert len(out) == 4
+    assert svc.stats["batches"] == 2            # 3-wide trace + loner
+    assert svc.stats["batched_rhs"] == 3
+    assert loose.diagnostics["batch_cols"] == 1
+    # per-request tol honored: the loose request converged in fewer iters
+    tight_iters = max(svc.diagnostics[r]["iterations"]
+                      for r in out if r != loose.rid)
+    assert loose.diagnostics["iterations"] < tight_iters
+
+
+def test_per_request_maxiter_and_x0_warm_start(problem):
+    A, b = problem
+    svc = _service()
+    svc.register("m", A)
+    capped = svc.submit("m", b, method="solve", tol=1e-14, maxiter=3)
+    svc.drain()
+    assert capped.diagnostics["iterations"] == 3
+    assert not capped.diagnostics["converged"]
+    assert svc.stats["unconverged"] == 1
+    # x0 at the solution: zero iterations
+    ref = svc.submit("m", b, method="pcg")
+    svc.drain()
+    warm = svc.submit("m", b, method="pcg", x0=ref.result())
+    svc.drain()
+    assert warm.diagnostics["iterations"] == 0
+    assert warm.diagnostics["converged"]
+
+
+def test_multi_rhs_payload_and_mixed_batch(problem):
+    """[n, k] payloads ride the same trace as [n] requests; each request
+    gets back its own columns."""
+    A, b = problem
+    rng = np.random.default_rng(1)
+    B = np.stack([rng.standard_normal(A.nrows) for _ in range(2)], axis=1)
+    svc = _service(max_rhs=8)
+    svc.register("m", A)
+    t_multi = svc.submit("m", B, method="pcg")
+    t_single = svc.submit("m", b, method="pcg")
+    svc.drain()
+    assert svc.stats["batches"] == 1
+    assert svc.stats["batched_rhs"] == 3
+    assert t_multi.result().shape == B.shape
+    assert t_single.result().shape == b.shape
+    for j in range(2):
+        rel = (np.linalg.norm(B[:, j] - A.matvec(t_multi.result()[:, j]))
+               / np.linalg.norm(B[:, j]))
+        assert rel < 1e-6
+    rel = np.linalg.norm(b - A.matvec(t_single.result())) / np.linalg.norm(b)
+    assert rel < 1e-6
+
+
+def test_max_rhs_chunks_columns(problem):
+    A, _ = problem
+    rng = np.random.default_rng(2)
+    svc = _service(max_rhs=2)
+    svc.register("m", A)
+    for _ in range(5):
+        svc.submit("m", rng.standard_normal(A.nrows))
+    svc.drain()
+    assert svc.stats["batches"] == 3               # 2 + 2 + 1
+    assert svc.stats["batched_rhs"] == 4
+
+
+# ------------------------------------------------------------- scheduling
+def test_priority_classes_order_drain(problem):
+    A, _ = problem
+    rng = np.random.default_rng(3)
+    svc = _service()
+    svc.register("m", A)
+    batch = svc.submit("m", rng.standard_normal(A.nrows), priority="batch")
+    inter = svc.submit("m", rng.standard_normal(A.nrows), tol=1e-7,
+                       priority="interactive")
+    svc.drain()
+    assert inter.diagnostics["batch"] < batch.diagnostics["batch"]
+
+
+def test_priority_aging_prevents_starvation():
+    """A long-waiting batch group outranks a fresh interactive group once
+    it has aged past the priority gap (pure scheduler-order check)."""
+    svc = _service(priority_aging=0.5)
+    old_batch = _Group(("m", "solve", 0.0, 1), created=0.0)
+    old_batch.requests.append(_Pending(0, np.ones(2), None, 2, 0.0, None))
+    fresh_inter = _Group(("m", "pcg", 0.0, 1), created=10.0)
+    fresh_inter.requests.append(_Pending(1, np.ones(2), None, 0, 10.0, None))
+    # shortly after arrival the interactive group wins...
+    assert (svc._order_key(fresh_inter, 10.1)
+            < svc._order_key(old_batch, 10.1 - 10.0 + 0.9))
+    # ...but the batch group aged 10s has been promoted past it
+    assert svc._order_key(old_batch, 10.1) < svc._order_key(fresh_inter, 10.1)
+
+
+def test_worker_coalesces_across_bursts(problem):
+    """Threaded mode: requests submitted in separate bursts inside one
+    window ride ONE multi-RHS trace (host-backend half of acceptance (b);
+    the 2x4-mesh fp64 version runs in dist_solve_script.py)."""
+    A, _ = problem
+    rng = np.random.default_rng(4)
+    svc = _service(max_rhs=8, coalesce_window=1.0)
+    svc.register("m", A)
+    bs = [rng.standard_normal(A.nrows) for _ in range(3)]
+    with svc:
+        tickets = []
+        for bi in bs:
+            tickets.append(svc.submit("m", bi, method="pcg"))
+            time.sleep(0.02)
+        xs = [t.result(timeout=60) for t in tickets]
+    assert svc.stats["batches"] == 1
+    assert svc.stats["batched_rhs"] == 3
+    for bi, xi in zip(bs, xs):
+        rel = np.linalg.norm(bi - A.matvec(xi)) / np.linalg.norm(bi)
+        assert rel < 1e-6
+    with pytest.raises(RuntimeError, match="drain"):
+        with svc:
+            svc.drain()
+
+
+def test_worker_close_flushes_queue(problem):
+    A, _ = problem
+    svc = _service(coalesce_window=30.0)       # window far beyond the test
+    svc.register("m", A)
+    svc.start()
+    t = svc.submit("m", np.ones(A.nrows))
+    svc.close()                                # flush ignores the window
+    assert t.done()
+    assert svc.stats["batches"] == 1
+
+
+# ------------------------------------------------------------------- wire
+def test_wire_only_operation(problem):
+    """Register + solve purely through encoded payloads (host half of
+    acceptance (a)): matrices by fingerprint, requests by wire dict, every
+    payload passed through an actual json byte hop."""
+    A, b = problem
+    svc = _service(AMGConfig(tol=1e-8))
+    mid = svc.register_wire(json.loads(json.dumps(csr_to_wire(A))))
+    rng = np.random.default_rng(5)
+    bs = [b] + [rng.standard_normal(A.nrows) for _ in range(2)]
+    tickets = [svc.submit_wire(json.loads(json.dumps(
+        solve_request_to_wire(mid, bi, method="pcg")))) for bi in bs]
+    svc.drain()
+    assert svc.stats["wire_requests"] == 3
+    assert svc.stats["batches"] == 1               # same-key wire reqs batch
+    for bi, t in zip(bs, tickets):
+        rel = (np.linalg.norm(bi - A.matvec(t.result()))
+               / np.linalg.norm(bi))
+        assert rel < 1e-6
+    # re-registering the same matrix is idempotent (same fingerprint id)
+    assert svc.register_wire(csr_to_wire(A)) == mid
+
+
+# ------------------------------------------------------------- accounting
+def test_store_accounting_hits_evictions_setup_cost(problem):
+    """Acceptance (c): store.stats() hit/evict/setup-cost counters through
+    real service traffic, with bytes-budget eviction."""
+    A, b = problem
+    A2 = laplace_3d(5)
+    store = SessionStore(BytesBudgetPolicy(max_bytes=1))   # evict eagerly
+    svc = _service(AMGConfig(), store=store)
+    svc.register("m1", A)
+    svc.register("m2", A2)
+    svc.submit("m1", b)
+    svc.drain()
+    st = store.stats()
+    assert st["misses"] == 1 and st["puts"] == 1
+    assert st["evictions"] == 1                  # budget 1 byte: evicted
+    assert st["setup_cost_evicted"] > 0          # real measured seconds
+    assert svc.stats["setups"] == 1
+    svc.submit("m1", b)                          # must re-setup after evict
+    svc.drain()
+    assert store.stats()["misses"] == 2
+    assert svc.stats["setups"] == 2
+    # a roomy store: second drain hits, third matrix counts its own setup
+    store2 = SessionStore()
+    svc2 = _service(AMGConfig(), store=store2)
+    svc2.register("m1", A)
+    svc2.register("m2", A2)
+    svc2.submit("m1", b)
+    svc2.drain()
+    svc2.submit("m1", b)
+    svc2.submit("m2", np.ones(A2.nrows))
+    svc2.drain()
+    st2 = store2.stats()
+    assert st2["hits"] == 1 and st2["misses"] == 2
+    assert st2["entries"] == 2 and st2["evictions"] == 0
+    assert st2["bytes"] > 0 and st2["setup_cost_total"] > 0
+    assert svc2.stats["setups"] == 2
+    rep = svc2.report()
+    assert rep.store["hits"] == 1
+    assert set(rep.per_request) == set(svc2.diagnostics)
+    assert "store[" in rep.summary()
+
+
+def test_submit_copies_request_buffers(problem):
+    """submit() returns before the solve runs — a caller reusing its
+    buffer must not corrupt the queued request."""
+    A, b = problem
+    svc = _service()
+    svc.register("m", A)
+    buf = b.copy()
+    t1 = svc.submit("m", buf, method="pcg")
+    buf[:] = 0.0                             # reuse before the drain
+    t2 = svc.submit("m", buf + 1.0, method="pcg")
+    svc.drain()
+    rel = np.linalg.norm(b - A.matvec(t1.result())) / np.linalg.norm(b)
+    assert rel < 1e-6                        # solved the ORIGINAL b
+    assert t2.diagnostics["converged"]
+
+
+def test_diagnostics_history_is_bounded(problem):
+    A, b = problem
+    svc = _service(AMGConfig(tol=1e-2, maxiter=2), diagnostics_limit=3)
+    svc.register("m", A)
+    for _ in range(5):
+        svc.submit("m", b)
+        svc.drain()
+    assert len(svc.diagnostics) == 3         # only the newest survive
+    assert svc.stats["requests"] == 5
+
+
+def test_bytes_accounting_sees_lazy_dist_lowering(problem):
+    """A dist session lowers its device arrays on first solve — the store
+    must see the grown footprint, not the at-put host-hierarchy bytes."""
+    A, b = problem
+    store = SessionStore()
+    cfg = AMGConfig(backend="dist", n_pods=1, lanes=1, strategy="standard",
+                    tol=1e-4)
+    svc = _service(cfg, store=store)
+    svc.register("m", A)
+    bound = svc.bound_for("m")
+    before = store.stats()["bytes"]
+    svc.submit("m", b, method="pcg")
+    svc.drain()                              # first solve lowers the arrays
+    assert bound._dist is not None
+    assert store.stats()["bytes"] > before
+
+
+def test_error_lands_on_ticket(problem, monkeypatch):
+    A, b = problem
+    svc = _service()
+    svc.register("m", A)
+    t = svc.submit("m", b)
+    monkeypatch.setattr(svc.solver, "setup",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device fell over")))
+    out = svc.drain()
+    assert out == {} and svc.stats["errors"] == 1
+    assert t.done()
+    with pytest.raises(RuntimeError, match="device fell over"):
+        t.result()
+    assert "error" in svc.diagnostics[t.rid]
+
+
+def test_dist_backend_through_service(problem):
+    """The service drives the dist backend (1x1 mesh) and stages b once in
+    the session's staging dtype."""
+    A, b = problem
+    cfg = AMGConfig(backend="dist", n_pods=1, lanes=1, strategy="standard",
+                    tol=1e-5, opts=SolveOptions(smoother="hybrid_gs_sym"))
+    svc = _service(cfg)
+    svc.register("m", A)
+    t = svc.submit("m", b, method="pcg")
+    svc.drain()
+    assert t.diagnostics["converged"]
+    rel = np.linalg.norm(b - A.matvec(t.result())) / np.linalg.norm(b)
+    assert rel < 1e-4
+    bound = svc.bound_for("m")
+    assert bound.staging_dtype() == np.float32      # fp32 session
+    assert bound._check_b(b).dtype == np.float32
+    staged = bound._check_b(b.astype(np.float32))
+    assert staged.dtype == np.float32               # converted exactly once
