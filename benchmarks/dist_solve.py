@@ -198,13 +198,17 @@ def serving_rows(smoke: bool | None = None):
     hit, one request per drain) and coalesced (k requests stacked into ONE
     multi-RHS trace), on the host and dist backends.  The ``worst_rel`` /
     ``unconverged`` fields feed the CI gate's presence + divergence check
-    (wall-clock derived solves/s stays ungated)."""
+    (wall-clock derived solves/s stays ungated); ``kernel=`` records which
+    local kernel served the row — ``host_csr``, the fine level's layout
+    (``ell``/``bcsr``) for single-request dist rows, or the native
+    multi-RHS SpMM label (``ell_spmm``/``bcsr_spmm``, ``ell_vmap`` when the
+    legacy vmap trace is forced) for coalesced batches."""
     if smoke is None:
         smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
     import jax
     import numpy as np
 
-    from repro.amg.api import AMGConfig, AMGService, clear_sessions
+    from repro.amg.api import AMGConfig, AMGService, AMGSolver, clear_sessions
     from repro.amg.problems import laplace_3d
 
     n = 8 if smoke else 12
@@ -224,6 +228,19 @@ def serving_rows(smoke: bool | None = None):
         svc = AMGService(cfg, max_rhs=k)
         svc.register("m", A)
 
+        def serving_kernel(multi: bool) -> str:
+            """Which local kernel serves a batch on this backend."""
+            if backend == "host":
+                return "host_csr"
+            # session-cache hit: the same bound solver the service drains use
+            dh = AMGSolver(cfg).setup(A).dist_hierarchy
+            fine = dh.kernel_table()[0]["kernel"]      # 'ell' | 'bcsr'
+            if not multi:
+                return fine
+            if not dh.native_spmm:
+                return "ell_vmap"
+            return f"{fine}_spmm" if fine == "bcsr" else "ell_spmm"
+
         def measure(tag, reqs, one_per_drain):
             t0 = time.perf_counter()
             tickets = []
@@ -239,10 +256,11 @@ def serving_rows(smoke: bool | None = None):
                 np.linalg.norm(b - A.matvec(t.result())) / np.linalg.norm(b)
                 for b, t in zip(reqs, tickets))
             unconv = sum(not t.diagnostics["converged"] for t in tickets)
+            kern = serving_kernel(multi=not one_per_drain and len(reqs) > 1)
             return (f"serve_{tag}_{backend}", dt / len(reqs) * 1e6,
                     f"backend={backend};requests={len(reqs)};"
                     f"solves_per_s={len(reqs) / dt:.2f};"
-                    f"batches={svc.stats['batches']};"
+                    f"batches={svc.stats['batches']};kernel={kern};"
                     f"worst_rel={worst:.3e};unconverged={unconv}")
 
         # cold: ONE request paying setup + lowering + compile in-band

@@ -1,16 +1,36 @@
 """Roofline table (EXPERIMENTS.md §Roofline source): reads the dry-run
-sweep JSON and prints per-(arch × shape × mesh) terms."""
+sweep JSON and prints per-(arch × shape × mesh) terms, followed by the
+*measured* ERT peaks (from ``BENCH_kernels.json``, i.e.
+:func:`repro.launch.roofline.ert_sweep`) so the modeled documented-constant
+terms sit next to what the current backend was actually measured to do."""
 import json
 import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..",
                        "dryrun_results.json")
+BENCH_KERNELS = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_kernels.json")
+
+
+def measured_rows(path=BENCH_KERNELS):
+    """ERT measured-peak rows: one per swept micro-kernel, with the
+    documented-constant ratio where one exists."""
+    if not os.path.exists(path):
+        return [("roofline_measured_missing", 0.0,
+                 "run: python -m benchmarks.kernels --smoke")]
+    out = []
+    for r in json.load(open(path))["rows"]:
+        if r["name"].startswith(("ert_", "kern_")):
+            out.append((f"roofline_measured_{r['name']}",
+                        r["us_per_call"], r["derived"]))
+    return out
 
 
 def rows(path=RESULTS):
     if not os.path.exists(path):
-        return [("lm_roofline_missing", 0.0,
-                 "run: python -m repro.launch.dryrun --all --both-meshes")]
+        return ([("lm_roofline_missing", 0.0,
+                  "run: python -m repro.launch.dryrun --all --both-meshes")]
+                + measured_rows())
     out = []
     for r in json.load(open(path)):
         name = f"roofline_{r['arch']}_{r['shape']}_{r.get('mesh', '?')}"
@@ -31,4 +51,4 @@ def rows(path=RESULTS):
                     f"dom={r['dominant']};roofline={r['roofline_fraction']:.4f};"
                     f"compute_s={r['compute_s']:.3f};memory_s={r['memory_s']:.3f};"
                     f"coll_s={r['collective_s']:.3f};xpod_s={r['cross_pod_s']:.3f}"))
-    return out
+    return out + measured_rows()

@@ -4,7 +4,7 @@ import sys
 import time
 
 from . import (amg_levels, amg_scaling, comm_strategies, dist_setup,
-               dist_solve, lm_roofline, pingpong_model, ptap_sweeps)
+               dist_solve, kernels, lm_roofline, pingpong_model, ptap_sweeps)
 from repro.core.perf_model import BLUE_WATERS, QUARTZ
 
 MODULES = [
@@ -23,6 +23,7 @@ MODULES = [
     ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
     ("dist_solve_serving", lambda: dist_solve.serving_rows(smoke=True)),
     ("dist_setup", lambda: dist_setup.rows(smoke=True)),
+    ("kernels", lambda: kernels.rows(smoke=True)),
     ("roofline", lambda: lm_roofline.rows()),
 ]
 

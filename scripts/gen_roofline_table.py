@@ -1,9 +1,49 @@
 """Generate the §Dry-run and §Roofline markdown tables from
-dryrun_results.json (paste into EXPERIMENTS.md)."""
+dryrun_results.json (paste into EXPERIMENTS.md), plus the measured-peak
+table from BENCH_kernels.json: peaks there come from the ERT sweep
+(:func:`repro.launch.roofline.ert_sweep`), so the per-kernel columns are
+"% of what this machine measured", not documented-estimate fractions."""
 import json
+import os
+import re
 import sys
 
 ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+BENCH_KERNELS = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_kernels.json")
+
+
+def _derived_map(derived):
+    return dict(re.findall(r"([A-Za-z_][A-Za-z0-9_]*)=([^;]+)", derived))
+
+
+def print_measured_table(path=BENCH_KERNELS):
+    if not os.path.exists(path):
+        print("\n### §Measured roofline — missing (run: python -m "
+              "benchmarks.kernels --smoke)\n")
+        return
+    rows = json.load(open(path))["rows"]
+    print("\n### §Measured roofline (ERT sweep — empirical peaks, "
+          "not documented constants)\n")
+    print("| micro-kernel | best µs | measured peak B/s | "
+          "documented B/s |")
+    print("|---|---|---|---|")
+    for r in rows:
+        if not r["name"].startswith("ert_"):
+            continue
+        d = _derived_map(r["derived"])
+        print(f"| {r['name']} | {r['us_per_call']:.1f} | "
+              f"{d.get('bw', 'n/a')} | {d.get('documented_bw', '—')} |")
+    print("\n| kernel | µs/call | achieved B/s | % of measured peak | "
+          "parity vs host CSR |")
+    print("|---|---|---|---|---|")
+    for r in rows:
+        if not r["name"].startswith("kern_"):
+            continue
+        d = _derived_map(r["derived"])
+        print(f"| {r['name']} | {r['us_per_call']:.1f} | "
+              f"{d.get('achieved_bw', 'n/a')} | {d.get('pct_peak', 'n/a')}% "
+              f"| {d.get('parity', 'n/a')} |")
 
 
 def fmt_bytes(b):
@@ -15,7 +55,11 @@ def fmt_bytes(b):
     return f"{b:.0f} B"
 
 
-def main(path="dryrun_results.json"):
+def main(path="dryrun_results.json", bench_kernels=BENCH_KERNELS):
+    if not os.path.exists(path):
+        print(f"(no {path} — dry-run tables skipped)")
+        print_measured_table(bench_kernels)
+        return
     rs = json.load(open(path))
     cells = {}
     skips = {}
@@ -76,6 +120,8 @@ def main(path="dryrun_results.json"):
                 continue
             print(f"| {a} | {s} | {fmt_bytes(r['cross_pod_bytes_per_dev'])} | "
                   f"{r['cross_pod_s']:.3f} | {r['dominant']} |")
+
+    print_measured_table(bench_kernels)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@
 Implements exactly what AMG needs: SpMV, SpGEMM (vectorized Gustavson via
 expand/coalesce), transpose, diagonal extraction, pruning, and converters.
 All index arrays are int64; values float64.
+
+Also holds the :class:`BCSR` block layout (dense ``bs×bs`` blocks in a
+block-ELL arrangement) and :func:`csr_to_bcsr` — the host-side lowering the
+MXU-blocked Pallas kernel (:mod:`repro.kernels.spmv.bcsr`) consumes.
 """
 from __future__ import annotations
 
@@ -178,3 +182,84 @@ class CSR:
         indptr = (self.indptr[row_lo:row_hi + 1] - self.indptr[row_lo]).astype(np.int64)
         return CSR((row_hi - row_lo, self.ncols), indptr,
                    self.indices[sl].copy(), self.data[sl].copy())
+
+
+# --------------------------------------------------------------------------
+# BCSR: dense bs×bs blocks in a block-ELL layout (the MXU kernel's form)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BCSR:
+    """Block-ELL BCSR: every stored block is a dense ``bs×bs`` tile.
+
+    ``bcols[r, j]`` is the block-column id of block row ``r``'s j-th stored
+    block (-1 padding past the row's block count); ``bvals[r, j]`` the dense
+    tile (explicit zero fill inside).  Rows/columns are zero-padded up to a
+    multiple of ``block_size``; ``shape`` keeps the logical (unpadded)
+    extent so round-trips slice the padding back off.
+    """
+
+    shape: tuple[int, int]     # logical (unpadded) shape
+    block_size: int
+    bcols: np.ndarray          # [mb, Kb] int32, -1 pad
+    bvals: np.ndarray          # [mb, Kb, bs, bs] float64
+
+    @property
+    def n_blocks(self) -> int:
+        return int((self.bcols >= 0).sum())
+
+    @property
+    def fill(self) -> float:
+        """Fraction of stored block entries that are true nonzeros."""
+        stored = self.n_blocks * self.block_size ** 2
+        return float(np.count_nonzero(self.bvals)) / stored if stored else 0.0
+
+    def to_dense(self) -> np.ndarray:
+        bs = self.block_size
+        mb, Kb = self.bcols.shape
+        nbc = -(-self.shape[1] // bs)
+        out = np.zeros((mb * bs, nbc * bs))
+        for r in range(mb):
+            for j in range(Kb):
+                bc = int(self.bcols[r, j])
+                if bc < 0:
+                    continue
+                out[r * bs:(r + 1) * bs, bc * bs:(bc + 1) * bs] = \
+                    self.bvals[r, j]
+        return out[: self.shape[0], : self.shape[1]]
+
+
+def csr_to_bcsr(A: CSR, block_size: int) -> BCSR:
+    """Lower a CSR matrix to block-ELL BCSR with dense ``bs×bs`` blocks.
+
+    Rows and columns are implicitly padded (with zeros) to multiples of
+    ``block_size``; blocks never straddle the padding boundary.  Vectorized:
+    one ``np.unique`` over block coordinates, then a scatter of the values
+    into their tiles.
+    """
+    bs = int(block_size)
+    if bs <= 0:
+        raise ValueError(f"block_size must be positive, got {bs}")
+    mb = -(-A.nrows // bs)
+    nbc = -(-A.ncols // bs)
+    r, c, v = A.rows_expanded(), A.indices, A.data
+    if r.size == 0:
+        return BCSR(shape=A.shape, block_size=bs,
+                    bcols=np.full((mb, 0), -1, dtype=np.int32),
+                    bvals=np.zeros((mb, 0, bs, bs)))
+    br, bc = r // bs, c // bs
+    key = br * nbc + bc
+    ukeys, inv = np.unique(key, return_inverse=True)
+    ubr = (ukeys // nbc).astype(np.int64)
+    ubc = (ukeys % nbc).astype(np.int64)
+    # slot of each stored block within its block row (ukeys are sorted, so
+    # blocks of one row are contiguous and column-ordered)
+    row_starts = np.searchsorted(ubr, np.arange(mb))
+    slot = np.arange(ukeys.size, dtype=np.int64) - row_starts[ubr]
+    Kb = int(np.bincount(ubr, minlength=mb).max(initial=0))
+    bcols = np.full((mb, Kb), -1, dtype=np.int32)
+    bcols[ubr, slot] = ubc.astype(np.int32)
+    bvals = np.zeros((mb, Kb, bs, bs))
+    bvals[ubr[inv], slot[inv], r % bs, c % bs] = v
+    return BCSR(shape=A.shape, block_size=bs, bcols=bcols, bvals=bvals)

@@ -55,6 +55,7 @@ from ..core.perf_model import TPU_V5E, MachineParams
 from ..core.selector import select
 from ..core.topology import Partition, Topology
 from .dist import rect_vector_graph, schedule_comm_stats
+from ..kernels.spmv.ops import select_dist_kernel
 from .dist_spmv import (DistOperator, build_dist_operator,
                         build_dist_operator_from_blocks, local_square_block)
 from .hierarchy import Hierarchy
@@ -79,6 +80,9 @@ class DistLevel:
     coarse_inv: np.ndarray | None = None  # [D, rows_local, D*rows_local]
     strategies: dict[str, str] = dataclasses.field(default_factory=dict)
     modeled: dict[str, dict[str, float]] = dataclasses.field(default_factory=dict)
+    # local-kernel layout decision for A (select_dist_kernel dict: kernel,
+    # block_size, ell/bcsr cost + fill) — reporting alongside the strategy
+    local_kernel: dict = dataclasses.field(default_factory=dict)
     # per-op modeled message/byte counts for the selected strategy
     # (schedule_comm_stats), consumed by cycle_comm_stats
     comm_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
@@ -148,6 +152,12 @@ class DistHierarchy:
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.reduce_strategy = reduce_strategy
+        # multi-RHS routing: True traces the ``*_m`` programs directly on
+        # [local, k] operands (native SpMM — one pass over each operator's
+        # nonzeros and ONE halo exchange serve all k columns); False keeps
+        # the legacy jax.vmap-over-columns trace, retained as the parity
+        # oracle the native path is tested against
+        self.native_spmm = True
         # program key (traced-knob subset of opts) -> (programs dict,
         # run arrays); see :meth:`programs`
         self._programs: dict[tuple, tuple] = {}
@@ -268,6 +278,14 @@ class DistHierarchy:
             gA = rect_vector_graph(lv.A, part, part)
             sA, tA = choose(gA, "spmv_A")
             Aop = make_op(lv.A, sA, part, part, gA)
+            # per-level local-kernel layout: ELL gather vs MXU-blocked BCSR
+            # (A only — P/R are too rectangular/scattered to block well, and
+            # the coarsest A never runs a SpMV, its solve being dense)
+            sel = select_dist_kernel(Aop.ell_cols)
+            if sel["kernel"] == "bcsr" and l + 1 < len(src_levels):
+                Aop.lower_bcsr(sel["block_size"])
+            else:
+                sel = dict(sel, kernel="ell", block_size=0)
             d = lv.A.diagonal()
             dinv = 1.0 / np.where(d == 0, 1.0, d)
             dinv_dev = np.zeros((D, part.max_local_size), dtype=np.float64)
@@ -276,7 +294,8 @@ class DistHierarchy:
                 dinv_dev[q, : hi - lo] = dinv[lo:hi]
             dl = DistLevel(A=Aop, dinv=dinv_dev,
                            strategies={"spmv_A": sA},
-                           modeled={"spmv_A": tA})
+                           modeled={"spmv_A": tA},
+                           local_kernel=sel)
             dl.comm_stats["spmv_A"] = schedule_comm_stats(gA, sA)
             if lv.P is not None and l + 1 < len(src_levels):
                 cpart = parts[l + 1]
@@ -339,6 +358,29 @@ class DistHierarchy:
                        f"{row['strategy']:<8s} {ts}")
         return "\n".join(out)
 
+    def kernel_table(self) -> list[dict]:
+        """One row per level: the local-kernel layout decision for A.
+
+        ``kernel`` is what actually runs ('bcsr' only when the operator was
+        lowered); the cost/fill columns are the heuristic's inputs
+        (:func:`repro.kernels.spmv.ops.select_dist_kernel`), kept so
+        reports can show *why* a level picked its layout.
+        """
+        rows = []
+        for l, dl in enumerate(self.levels):
+            sel = dl.local_kernel
+            rows.append({
+                "level": l,
+                "kernel": dl.A.local_kernel,
+                "block_size": dl.A.block_size,
+                "rows_local": dl.A.rows_local,
+                "ell_fill": sel.get("ell_fill", 0.0),
+                "bcsr_fill": sel.get("bcsr_fill", 0.0),
+                "ell_cost": sel.get("ell_cost", 0.0),
+                "bcsr_cost": sel.get("bcsr_cost", float("inf")),
+            })
+        return rows
+
     # ----------------------------------------------------------- host layout
     def scatter(self, x: np.ndarray, level: int = 0) -> jnp.ndarray:
         arr = self.levels[level].A.scatter_x(np.asarray(x), dtype=self.dtype)
@@ -382,8 +424,12 @@ class DistHierarchy:
         if sweeps == 0:
             return x
         aA = arrs["A"]
+        # [local, k] operands on the native SpMM path: the elementwise D⁻¹
+        # scaling broadcasts over the trailing RHS axis
+        dinv = arrs["dinv"]
+        if x.ndim == 2:
+            dinv = dinv[:, None]
         if opts.smoother == "jacobi":
-            dinv = arrs["dinv"]
             for _ in range(sweeps):
                 x = x + opts.omega * dinv * (b - self._spmv(dl.A, aA, x))
             return x
@@ -408,7 +454,7 @@ class DistHierarchy:
         degree = opts.cheby_degree * sweeps
         theta, delta, sigma = chebyshev_coeffs(dl.rho)
         return chebyshev_recurrence(
-            lambda v: self._spmv(dl.A, aA, v), arrs["dinv"], x, b, degree,
+            lambda v: self._spmv(dl.A, aA, v), dinv, x, b, degree,
             theta, delta, sigma)
 
     def _cycle_dev(self, arrs, b, x, opts, level: int = 0,
@@ -481,16 +527,21 @@ class DistHierarchy:
         smoother are baked in at trace time — and ``arrs`` the matching
         per-level device arrays to pass them (:meth:`run_arrays`).
         Single-RHS programs take [local] vectors; the ``*_m`` variants take
-        [local, k] multi-RHS blocks — the cycle is vmapped over the RHS
-        axis inside the shard_map body, so k systems share ONE device trace
-        per program (norms/dots come back as replicated [k] vectors).
+        [local, k] multi-RHS blocks.  With :attr:`native_spmm` (the
+        default) the cycle traces directly on the [local, k] operands —
+        every SpMV is a native SpMM reading each operator's nonzeros once
+        for all k columns and exchanging ONE fused halo buffer; with it
+        off the legacy jax.vmap-over-columns trace is kept as the parity
+        oracle.  Either way, norms/dots come back as replicated [k]
+        vectors.
 
         The cache key covers only the knobs the traced program reads —
         host-reference-only knobs (``smoother_parts``; ``block_size`` for
         non-block smoothers) never force a bitwise-identical re-compile.
         """
         key = (opts.cycle, opts.smoother, opts.presweeps, opts.postsweeps,
-               opts.omega, opts.cheby_degree, self._smoother_arrs_key(opts))
+               opts.omega, opts.cheby_degree, self._smoother_arrs_key(opts),
+               self.native_spmm)
         if key in self._programs:
             return self._programs[key]
         run_arrs = self.run_arrays(opts)
@@ -509,10 +560,19 @@ class DistHierarchy:
             return self._spmv(self.levels[0].A, arrs[0]["A"], x)
 
         def spmv0_m(arrs, x):                       # [local, k] → [local, k]
+            if self.native_spmm:
+                # native SpMM: one pass over A's nonzeros (and one fused
+                # halo exchange) serves all k columns
+                return spmv0(arrs, x)
             return jax.vmap(lambda v: spmv0(arrs, v), in_axes=1,
                             out_axes=1)(x)
 
         def vcycle_m(arrs, b, x):                   # batched V-cycle
+            if self.native_spmm:
+                # the whole cycle traces on [local, k] operands: every
+                # SpMV/restrict/interpolate is a native SpMM, the dense
+                # smoother factors and coarse solve are plain matmuls
+                return self._cycle_dev(arrs, b, x, opts)
             if x is None:
                 return jax.vmap(
                     lambda bc: self._cycle_dev(arrs, bc, None, opts),

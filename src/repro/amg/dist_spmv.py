@@ -76,34 +76,104 @@ class DistOperator:
     send_idx: np.ndarray         # per-device slices of the plan arrays
     recv_sel: np.ndarray
     pool_sel: np.ndarray         # zeros placeholder when plan.pool_sel is None
+    # optional BCSR lowering (see lower_bcsr): dense bs×bs blocks feeding the
+    # MXU block-contraction kernel instead of the VPU gather
+    bcsr_bcols: np.ndarray | None = None   # [D, mb, Kb] int32, -1 pad
+    bcsr_bvals: np.ndarray | None = None   # [D, mb, Kb, bs, bs]
+    block_size: int = 0                    # 0 = ELL layout
 
     @property
     def n_devices(self) -> int:
         return self.plan.n_devices
 
+    @property
+    def local_kernel(self) -> str:
+        """Layout label for reporting: 'bcsr' once lowered, else 'ell'."""
+        return "bcsr" if self.bcsr_bcols is not None else "ell"
+
     def device_arrays(self) -> dict[str, np.ndarray]:
         """The sharded inputs the shard_map body needs for one matvec."""
-        return {"cols": self.ell_cols, "vals": self.ell_vals,
+        arrs = {"cols": self.ell_cols, "vals": self.ell_vals,
                 "send": self.send_idx, "recv": self.recv_sel,
                 "psel": self.pool_sel}
+        if self.bcsr_bcols is not None:
+            arrs["bcols"] = self.bcsr_bcols
+            arrs["bvals"] = self.bcsr_bvals
+        return arrs
+
+    def lower_bcsr(self, block_size: int) -> None:
+        """Lower this operator's per-device ELL blocks to block-ELL BCSR.
+
+        Each device's (rows_local × [local|halo]) sparse block is re-tiled
+        into dense ``bs×bs`` blocks; block-row padding never mixes devices
+        because each device is lowered independently.  Once lowered,
+        :meth:`apply` routes through the MXU block contraction (kernel or
+        inline einsum) instead of the ELL gather.
+        """
+        from .csr import CSR, csr_to_bcsr
+        D = self.n_devices
+        xfull_len = self.plan.local_n + self.plan.halo_len
+        per = []
+        for d in range(D):
+            cols = self.ell_cols[d]
+            keep = cols >= 0
+            r = np.broadcast_to(
+                np.arange(self.rows_local, dtype=np.int64)[:, None],
+                cols.shape)[keep]
+            per.append(csr_to_bcsr(
+                CSR.from_coo(r, cols[keep], self.ell_vals[d][keep],
+                             (self.rows_local, xfull_len)), block_size))
+        mb = per[0].bcols.shape[0] if per else 0
+        Kb = max((b.bcols.shape[1] for b in per), default=0)
+        bcols = np.full((D, mb, Kb), -1, dtype=np.int32)
+        bvals = np.zeros((D, mb, Kb, block_size, block_size),
+                         dtype=self.ell_vals.dtype)
+        for d, b in enumerate(per):
+            kb = b.bcols.shape[1]
+            bcols[d, :, :kb] = b.bcols
+            bvals[d, :, :kb] = b.bvals
+        self.bcsr_bcols, self.bcsr_bvals = bcols, bvals
+        self.block_size = int(block_size)
 
     def apply(self, arrs: dict[str, jnp.ndarray], x_loc: jnp.ndarray,
               use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
-        """Inside shard_map: halo exchange + local ELL SpMV for this device.
+        """Inside shard_map: halo exchange + local SpMV/SpMM for this device.
 
         ``arrs`` holds this device's slices of :meth:`device_arrays` (leading
-        device dim already squeezed).  ``use_kernel`` routes the local SpMV
-        through the Pallas ELL kernel; otherwise the inline gather form runs.
+        device dim already squeezed).  ``x_loc`` may be ``[local]`` (one RHS)
+        or ``[local, k]`` (multi-RHS): the halo is exchanged once with the
+        RHS axis riding along and the concatenated ``[local | halo]`` source
+        is indexed inside the local kernel — the fused SpMM never
+        materializes a per-column halo.  Routing: BCSR block contraction when
+        this operator was :meth:`lower_bcsr`'d, else the ELL kernel
+        (``use_kernel``) or the inline gather form.
         """
         psel = None if self.plan.pool_sel is None else arrs["psel"]
         halo = halo_exchange(x_loc, self.plan, arrs["send"], arrs["recv"], psel)
-        xfull = jnp.concatenate([x_loc, halo])
+        xfull = jnp.concatenate([x_loc, halo])    # one buffer for all RHS
+        multi = x_loc.ndim == 2
+        if "bcols" in arrs:
+            bcols, bvals = arrs["bcols"], arrs["bvals"]
+            if use_kernel:
+                from ..kernels.spmv.bcsr import bcsr_spmm, bcsr_spmv
+                fn = bcsr_spmm if multi else bcsr_spmv
+                y = fn(bcols, bvals, xfull, interpret=interpret)
+            else:
+                from ..kernels.spmv.bcsr import bcsr_apply_ref
+                y = bcsr_apply_ref(bcols, bvals, xfull)
+            return y[: self.rows_local]
         cols, vals = arrs["cols"], arrs["vals"]
         if use_kernel:
-            from ..kernels.spmv.spmv import ell_spmv
+            from ..kernels.spmv.spmv import ell_spmm, ell_spmv
+            if multi:
+                return ell_spmm(cols, vals, xfull, interpret=interpret)
             return ell_spmv(cols, vals, xfull, interpret=interpret)
         safe = jnp.maximum(cols, 0)
-        contrib = jnp.where(cols >= 0, vals * xfull[safe], 0.0)
+        if multi:
+            contrib = jnp.where((cols >= 0)[..., None],
+                                vals[..., None] * xfull[safe], 0.0)
+        else:
+            contrib = jnp.where(cols >= 0, vals * xfull[safe], 0.0)
         return contrib.sum(axis=1)
 
     # ------------------------------------------------------- host-side layout

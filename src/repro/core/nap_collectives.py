@@ -408,36 +408,46 @@ def halo_exchange(x_local: jnp.ndarray, plan: HaloPlan,
                   send_idx: jnp.ndarray, recv_sel: jnp.ndarray,
                   pool_sel: jnp.ndarray | None,
                   pod_axis: str = "pod", lane_axis: str = "lane") -> jnp.ndarray:
-    """Inside shard_map: return this device's halo values (plan.halo_len,).
+    """Inside shard_map: return this device's halo values.
 
     ``send_idx``/``recv_sel``/``pool_sel`` are the *per-device* slices of the
     plan arrays (sharded over the device axis ahead of time).
+
+    ``x_local`` may carry trailing dimensions — ``[local]`` for one RHS or
+    ``[local, k]`` for a multi-RHS batch; the halo is exchanged with the
+    trailing dims riding along (shape ``[halo_len] + ext``), so the fused
+    SpMM path moves one buffer for all k columns instead of k buffers.
     """
+    ext = x_local.shape[1:]
+
+    def _mask(idx):
+        return (idx >= 0).reshape(idx.shape + (1,) * len(ext))
+
     safe = jnp.maximum(send_idx, 0)
     if plan.strategy == "standard":
-        buf = jnp.where(send_idx >= 0, x_local[safe], 0.0)     # [D, K]
+        buf = jnp.where(_mask(send_idx), x_local[safe], 0.0)   # [D, K] + ext
         n_pods, lanes = plan.n_pods, plan.lanes
-        K = buf.shape[-1]
-        buf = buf.reshape(n_pods, lanes, K)
+        K = send_idx.shape[-1]
+        buf = buf.reshape((n_pods, lanes, K) + ext)
         buf = jax.lax.all_to_all(buf, pod_axis, split_axis=0, concat_axis=0)
         buf = jax.lax.all_to_all(buf, lane_axis, split_axis=1, concat_axis=1)
-        pool = buf.reshape(plan.pool_len)
+        pool = buf.reshape((plan.pool_len,) + ext)
     elif plan.strategy == "nap2":
-        buf = jnp.where(send_idx >= 0, x_local[safe], 0.0)     # [n_pods, K]
+        buf = jnp.where(_mask(send_idx), x_local[safe], 0.0)   # [n_pods, K] + ext
         buf = jax.lax.all_to_all(buf, pod_axis, split_axis=0, concat_axis=0)
-        # buf now [n_pods(src), K] at the lane-peer; share within the pod
-        pool = jax.lax.all_gather(buf, lane_axis, axis=0)      # [lanes, n_pods, K]
-        pool = pool.reshape(plan.pool_len)
+        # buf now [n_pods(src), K]+ext at the lane-peer; share within the pod
+        pool = jax.lax.all_gather(buf, lane_axis, axis=0)      # [lanes, n_pods, K] + ext
+        pool = pool.reshape((plan.pool_len,) + ext)
     elif plan.strategy == "nap3":
-        contrib = jnp.where(send_idx >= 0, x_local[safe], 0.0)  # [n_pods, Kc]
-        pod_pool = jax.lax.all_gather(contrib, lane_axis, axis=0)  # [lanes, n_pods, Kc]
-        pod_pool = pod_pool.reshape(-1)
+        contrib = jnp.where(_mask(send_idx), x_local[safe], 0.0)  # [n_pods, Kc] + ext
+        pod_pool = jax.lax.all_gather(contrib, lane_axis, axis=0)  # [lanes, n_pods, Kc] + ext
+        pod_pool = pod_pool.reshape((-1,) + ext)
         sel_safe = jnp.maximum(pool_sel, 0)
-        out_buf = jnp.where(pool_sel >= 0, pod_pool[sel_safe], 0.0)  # [n_pods, K3]
+        out_buf = jnp.where(_mask(pool_sel), pod_pool[sel_safe], 0.0)  # [n_pods, K3] + ext
         out_buf = jax.lax.all_to_all(out_buf, pod_axis, split_axis=0, concat_axis=0)
-        pool = jax.lax.all_gather(out_buf, lane_axis, axis=0)   # [lanes, n_pods, K3]
-        pool = pool.reshape(plan.pool_len)
+        pool = jax.lax.all_gather(out_buf, lane_axis, axis=0)   # [lanes, n_pods, K3] + ext
+        pool = pool.reshape((plan.pool_len,) + ext)
     else:
         raise ValueError(plan.strategy)
     safe_r = jnp.maximum(recv_sel, 0)
-    return jnp.where(recv_sel >= 0, pool[safe_r], 0.0)
+    return jnp.where(_mask(recv_sel), pool[safe_r], 0.0)

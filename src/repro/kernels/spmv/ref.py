@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the ELL SpMV kernel."""
+"""Pure-jnp oracles for the ELL SpMV / SpMM kernels."""
 import jax.numpy as jnp
 
 
@@ -9,4 +9,17 @@ def ell_spmv_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.nd
     """
     safe = jnp.maximum(cols, 0)
     contrib = jnp.where(cols >= 0, vals * x[safe], 0.0)
+    return contrib.sum(axis=1)
+
+
+def ell_spmm_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Y[i, :] = Σ_k vals[i,k] · X[cols[i,k], :] — the multi-RHS oracle.
+
+    cols: [n, K] int32, vals: [n, K], x: [m, k].  Identical summation order
+    to :func:`ell_spmv_ref` per column, so the two agree bit-for-bit.
+    """
+    if cols.shape[1] == 0:
+        return jnp.zeros((cols.shape[0], x.shape[1]), dtype=vals.dtype)
+    safe = jnp.maximum(cols, 0)
+    contrib = jnp.where((cols >= 0)[..., None], vals[..., None] * x[safe], 0.0)
     return contrib.sum(axis=1)

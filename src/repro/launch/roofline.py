@@ -13,11 +13,20 @@ per-device rates.  Collective bytes are NOT in cost_analysis: we parse the
 compiled HLO and sum result-shape bytes of every all-gather / all-reduce /
 reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op,
 classifying pod-crossing groups via the device-id → pod map.
+
+The documented-peak constants below feed the *modeled* terms; the
+ERT-style :func:`ert_sweep` complements them with **measured** ceilings —
+streaming bandwidth, random-gather bandwidth and dense FLOP rate swept
+over several working-set sizes and FLOP intensities on the actual backend
+— which is what ``benchmarks/kernels.py`` reports the SpMV/SpMM kernels
+against (achieved bytes/s as a % of the measured, not documented, peak).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
+import time
 
 import numpy as np
 
@@ -172,6 +181,115 @@ class RooflineTerms:
         bound: (model-useful compute time) / (achievable step time)."""
         ideal = self.model_flops / (self.n_chips * PEAK_FLOPS_BF16)
         return ideal / self.bound_s if self.bound_s else 0.0
+
+
+# --------------------------------------------------------------------------
+# ERT-style empirical roofline: measure the peaks instead of trusting the
+# datasheet.  Three micro-kernels swept over working-set sizes (and, for the
+# streaming kernel, FLOP intensities, ERT's defining axis):
+#
+#   stream  — y = a·y + c repeated t times per element: at t = 1 it is the
+#             STREAM scale+add bound (2 bytes-moved directions/elem); as t
+#             grows it leaves the bandwidth roof and exposes the FLOP peak,
+#   gather  — y = x[idx] with uniformly random idx: the access pattern of
+#             the ELL SpMV/SpMM kernels (one random read + one stream write
+#             + one index read per element),
+#
+# and the peaks are the best observed rate at each roof.  Everything is
+# timed on the current jax backend — CPU in CI, TPU on hardware — so the
+# "% of peak" a kernel reports is against what this machine can actually
+# do, not against v5e marketing numbers.
+# --------------------------------------------------------------------------
+
+ERT_WORKING_SETS = (1 << 16, 1 << 20, 1 << 23)       # elements
+ERT_SMOKE_WORKING_SETS = (1 << 13, 1 << 15)
+ERT_FLOP_INTENSITIES = (1, 4, 16, 64)                # t: 2t flops/elem
+ERT_SMOKE_FLOP_INTENSITIES = (1, 8)
+
+
+def _time_best(fn, args, reps: int) -> float:
+    """Best-of-``reps`` wall-clock seconds of ``fn(*args)`` (one unmeasured
+    warm-up call absorbs compilation)."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _ert_stream_fn(t: int):
+    import jax
+
+    @jax.jit
+    def run(x):
+        y = x
+        for _ in range(t):
+            y = y * 1.0000001 + 0.5       # 2 flops per element per pass
+        return y
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _ert_gather_fn():
+    import jax
+    import jax.numpy as jnp
+    return jax.jit(lambda x, idx: jnp.take(x, idx, axis=0))
+
+
+def ert_sweep(working_sets: tuple[int, ...] | None = None,
+              intensities: tuple[int, ...] | None = None,
+              reps: int = 3, dtype=np.float32, smoke: bool = False) -> dict:
+    """Measure this backend's achievable peaks, ERT style.
+
+    Returns ``{"stream_bw", "gather_bw", "flops", "points", ...}`` —
+    bandwidths in B/s, FLOP rate in FLOP/s, ``points`` the raw sweep (one
+    dict per (kernel, working set, intensity) cell).  ``smoke=True`` swaps
+    in small working sets so the sweep stays in CI budget; peaks are then
+    lower than a full sweep would find, which is fine — baselines and
+    fresh runs are compared at the same setting.
+    """
+    import jax
+    import jax.numpy as jnp
+    if working_sets is None:
+        working_sets = ERT_SMOKE_WORKING_SETS if smoke else ERT_WORKING_SETS
+    if intensities is None:
+        intensities = (ERT_SMOKE_FLOP_INTENSITIES if smoke
+                       else ERT_FLOP_INTENSITIES)
+    dsize = np.dtype(dtype).itemsize
+    rng = np.random.default_rng(0)
+    points: list[dict] = []
+    stream_bw = gather_bw = flops_peak = 0.0
+    t_min = min(intensities)
+    for w in working_sets:
+        x = jnp.asarray(rng.standard_normal(w), dtype=dtype)
+        for t in intensities:
+            s = _time_best(_ert_stream_fn(t), (x,), reps)
+            byts = 2.0 * w * dsize                   # read x + write y
+            fl = 2.0 * t * w
+            points.append({"kernel": "stream", "working_set": int(w),
+                           "flops_per_elem": 2 * t, "seconds": s,
+                           "bytes": byts, "flops": fl,
+                           "bw": byts / s, "flop_rate": fl / s})
+            if t == t_min:
+                stream_bw = max(stream_bw, byts / s)
+            flops_peak = max(flops_peak, fl / s)
+        idx = jnp.asarray(rng.integers(0, w, size=w), dtype=jnp.int32)
+        s = _time_best(_ert_gather_fn(), (x, idx), reps)
+        byts = w * (2.0 * dsize + 4.0)   # random read + write + idx read
+        points.append({"kernel": "gather", "working_set": int(w),
+                       "flops_per_elem": 0, "seconds": s, "bytes": byts,
+                       "flops": 0.0, "bw": byts / s, "flop_rate": 0.0})
+        gather_bw = max(gather_bw, byts / s)
+    return {"backend": jax.default_backend(),
+            "dtype": str(np.dtype(dtype)), "smoke": bool(smoke),
+            "stream_bw": stream_bw, "gather_bw": gather_bw,
+            "flops": flops_peak, "points": points,
+            "documented_hbm_bw": HBM_BW,
+            "documented_flops": PEAK_FLOPS_BF16}
 
 
 def roofline_terms(cost: dict, hlo_text: str, n_chips: int, pod_size: int,

@@ -104,6 +104,29 @@ def main():
         (stV, stW)
     print("OK cycle_smoother_parity")
 
+    # native multi-RHS SpMM routing (the default) vs the legacy
+    # vmap-over-columns trace: one batched [n, 4] cycle per (cycle,
+    # smoother) pair, ≤1e-7 on the same fp64 2x4 mesh.  The heuristic must
+    # have lowered at least one level to BCSR so the block path is covered.
+    from repro.amg.dist_solve import dist_vcycle
+
+    assert dh64.native_spmm, "native SpMM routing must be the default"
+    assert any(r["kernel"] == "bcsr" for r in dh64.kernel_table()), \
+        dh64.kernel_table()
+    Bm = np.stack([b] + [np.random.default_rng(3).standard_normal(A.nrows)
+                         for _ in range(3)], axis=1)
+    for cycle in CYCLES:
+        for sm in SMOOTHERS:
+            o = SolveOptions(cycle=cycle, smoother=sm,
+                             smoother_parts=N_PODS * LANES)
+            xn = dist_vcycle(dh64, Bm, o)
+            dh64.native_spmm = False
+            xv = dist_vcycle(dh64, Bm, o)
+            dh64.native_spmm = True
+            nd = np.abs(xn - xv).max() / max(np.abs(xv).max(), 1e-30)
+            assert nd < 1e-7, (cycle, sm, nd)
+    print("OK native_spmm_parity")
+
     # the symmetric hybrid GS sweep is an SPD preconditioner: dist PCG with
     # it converges on the 2x4 mesh and matches the host PCG history ≤1e-7
     osym = SolveOptions(smoother="hybrid_gs_sym",

@@ -1,0 +1,248 @@
+"""Kernel-tier validation for the multi-RHS SpMM and BCSR paths.
+
+Covers what test_kernels.py's single-RHS checks do not: the native ELL
+SpMM kernel against both the vmapped single-RHS kernel and the host CSR
+oracle (fp32/fp64, ragged K, padded rows), BCSR round-trips and the block
+contraction's dense equivalence, the degenerate shapes that used to crash
+``ell_spmv`` (K == 0, n == 0, empty x, k == 0), and hypothesis-style
+random-sparsity sweeps under the deterministic stub."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.amg.csr import CSR, csr_to_bcsr
+from repro.amg.problems import laplace_3d, laplace_3d_7pt
+from repro.kernels.spmv.bcsr import (BLOCK_SIZES, bcsr_apply_ref, bcsr_spmm,
+                                     bcsr_spmv)
+from repro.kernels.spmv.ops import (select_dist_kernel, select_local_kernel,
+                                    spmm)
+from repro.kernels.spmv.ref import ell_spmm_ref, ell_spmv_ref
+from repro.kernels.spmv.spmv import ell_spmm, ell_spmv
+
+
+def _random_ell(rng, n, m, K, dtype, pad_rows=0):
+    """Random ELL block; ``pad_rows`` trailing rows are all-padding."""
+    cols = rng.integers(0, m, size=(n, K)).astype(np.int32)
+    mask = rng.random((n, K)) < 0.3
+    cols[mask] = -1
+    if pad_rows:
+        cols[n - pad_rows:] = -1
+    vals = rng.standard_normal((n, K)).astype(dtype)
+    vals[cols == -1] = 0.0
+    return jnp.asarray(cols), jnp.asarray(vals)
+
+
+def _ell_to_csr(cols, vals, m):
+    cols = np.asarray(cols)
+    vals = np.asarray(vals, dtype=np.float64)
+    keep = cols >= 0
+    r = np.broadcast_to(np.arange(cols.shape[0])[:, None], cols.shape)[keep]
+    return CSR.from_coo(r, cols[keep], vals[keep], (cols.shape[0], m))
+
+
+# ---------------------------------------------------------------- ELL SpMM
+@pytest.mark.parametrize("n,m,K,k", [(8, 16, 3, 2), (100, 64, 7, 4),
+                                     (257, 300, 27, 8), (64, 64, 1, 5)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_ell_spmm_matches_vmapped_spmv_and_csr(n, m, K, k, dtype):
+    if dtype == np.float64 and not jax.config.jax_enable_x64:
+        dtype = np.float32     # x64 disabled in-process: still run the shape
+    rng = np.random.default_rng(n * K + k)
+    cols, vals = _random_ell(rng, n, m, K, dtype, pad_rows=3)
+    X = jnp.asarray(rng.standard_normal((m, k)).astype(dtype))
+    out = ell_spmm(cols, vals, X, interpret=True)
+    assert out.shape == (n, k)
+    # bit-for-bit vs the vmapped single-RHS kernel — the parity the native
+    # multi-RHS routing in dist_solve relies on
+    vmapped = jax.vmap(lambda xc: ell_spmv(cols, vals, xc, interpret=True),
+                       in_axes=1, out_axes=1)(X)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vmapped))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ell_spmm_ref(cols, vals, X)))
+    # vs the host CSR oracle, column by column
+    Acsr = _ell_to_csr(cols, vals, m)
+    ref = np.stack([Acsr.matvec(np.asarray(X[:, j], dtype=np.float64))
+                    for j in range(k)], axis=1)
+    tol = 1e-5 if np.dtype(dtype) == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               rtol=tol, atol=tol)
+
+
+def test_ell_spmm_ragged_k_and_block_rows_sweep():
+    rng = np.random.default_rng(11)
+    cols, vals = _random_ell(rng, 203, 150, 13, np.float32, pad_rows=7)
+    X = jnp.asarray(rng.standard_normal((150, 6)).astype(np.float32))
+    ref = ell_spmm_ref(cols, vals, X)
+    for br in (8, 32, 64, 512):
+        out = ell_spmm(cols, vals, X, block_rows=br, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_spmm_dispatch_matches_kernel():
+    rng = np.random.default_rng(2)
+    cols, vals = _random_ell(rng, 40, 32, 5, np.float32)
+    X = jnp.asarray(rng.standard_normal((32, 3)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(spmm(cols, vals, X, use_kernel=True, interpret=True)),
+        np.asarray(spmm(cols, vals, X, use_kernel=False)))
+
+
+# --------------------------------------------------------- degenerate shapes
+def test_ell_spmv_degenerate_shapes():
+    """K == 0 / n == 0 / empty x used to crash pallas_call; now exact zeros."""
+    f32 = jnp.float32
+    y = ell_spmv(jnp.zeros((5, 0), jnp.int32), jnp.zeros((5, 0), f32),
+                 jnp.ones((7,), f32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(5))
+    y = ell_spmv(jnp.zeros((0, 3), jnp.int32), jnp.zeros((0, 3), f32),
+                 jnp.ones((7,), f32), interpret=True)
+    assert y.shape == (0,)
+    y = ell_spmv(jnp.full((4, 2), -1, jnp.int32), jnp.zeros((4, 2), f32),
+                 jnp.zeros((0,), f32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(4))
+
+
+def test_ell_spmm_degenerate_shapes():
+    f32 = jnp.float32
+    for cols_s, x_s, out_s in [((5, 0), (7, 3), (5, 3)),   # K == 0
+                               ((0, 3), (7, 2), (0, 2)),   # n == 0
+                               ((4, 2), (0, 3), (4, 3)),   # empty x
+                               ((4, 2), (7, 0), (4, 0))]:  # k == 0
+        y = ell_spmm(jnp.zeros(cols_s, jnp.int32) - 1,
+                     jnp.zeros(cols_s, f32), jnp.zeros(x_s, f32),
+                     interpret=True)
+        assert y.shape == out_s
+        np.testing.assert_array_equal(np.asarray(y), np.zeros(out_s))
+
+
+def test_ell_spmv_tiny_n_no_overpadding():
+    """n < 8 rows must not crash nor over-pad past one block."""
+    rng = np.random.default_rng(0)
+    for n in (1, 3, 7):
+        cols, vals = _random_ell(rng, n, 10, 4, np.float32)
+        x = jnp.asarray(rng.standard_normal(10).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(ell_spmv(cols, vals, x, interpret=True)),
+            np.asarray(ell_spmv_ref(cols, vals, x)))
+
+
+# -------------------------------------------------------------------- BCSR
+@pytest.mark.parametrize("bs", BLOCK_SIZES)
+def test_csr_to_bcsr_round_trip(bs):
+    A = laplace_3d(5)
+    B = csr_to_bcsr(A, bs)
+    dense = A.to_dense()
+    np.testing.assert_array_equal(B.to_dense(), dense)
+    assert B.bcols.shape[0] == -(-A.nrows // bs)
+    assert 0.0 < B.fill <= 1.0
+    # every stored block id in range, padding all -1-terminated per row
+    assert B.bcols.max() < -(-A.ncols // bs)
+
+
+def test_csr_to_bcsr_empty():
+    B = csr_to_bcsr(CSR.from_coo([], [], [], (10, 10)), 8)
+    assert B.bcols.shape == (2, 0)
+    np.testing.assert_array_equal(B.to_dense(), np.zeros((10, 10)))
+
+
+@pytest.mark.parametrize("bs", BLOCK_SIZES)
+def test_bcsr_spmm_matches_dense(bs):
+    A = laplace_3d(5)
+    B = csr_to_bcsr(A, bs)
+    rng = np.random.default_rng(bs)
+    X = rng.standard_normal((A.ncols, 4)).astype(np.float32)
+    bcols = jnp.asarray(B.bcols)
+    bvals = jnp.asarray(B.bvals, dtype=jnp.float32)
+    out = bcsr_spmm(bcols, bvals, jnp.asarray(X), interpret=True)
+    ref = A.to_dense().astype(np.float32) @ X
+    np.testing.assert_allclose(np.asarray(out)[: A.nrows], ref,
+                               rtol=2e-5, atol=2e-5)
+    # the pure-jnp oracle matches the kernel's summation order exactly
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(bcsr_apply_ref(bcols, bvals,
+                                                   jnp.asarray(X))))
+    # single-RHS wrapper
+    y = bcsr_spmv(bcols, bvals, jnp.asarray(X[:, 0]), interpret=True)
+    np.testing.assert_allclose(np.asarray(y)[: A.nrows], ref[:, 0],
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------ layout heuristic
+def test_select_local_kernel_shapes():
+    A = laplace_3d(5)
+    K = int(np.diff(A.indptr).max())
+    cols = np.full((A.nrows, K), -1, dtype=np.int32)
+    lens = np.diff(A.indptr)
+    r = A.rows_expanded()
+    slot = np.arange(A.nnz) - np.repeat(A.indptr[:-1], lens)
+    cols[r, slot] = A.indices
+    sel = select_local_kernel(cols)
+    assert sel["kernel"] in ("ell", "bcsr")
+    assert 0.0 < sel["ell_fill"] <= 1.0
+    if sel["kernel"] == "bcsr":
+        assert sel["block_size"] in BLOCK_SIZES
+        assert sel["bcsr_cost"] < sel["ell_cost"]
+    # empty block → ELL trivially
+    assert select_local_kernel(
+        np.full((4, 2), -1, np.int32))["kernel"] == "ell"
+    # the stacked form agrees with per-device aggregation
+    sel_d = select_dist_kernel(cols[None])
+    assert sel_d["kernel"] == sel["kernel"]
+
+
+# --------------------------------- hypothesis-style random sparsity sweeps
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 120), st.integers(1, 90), st.integers(1, 12),
+       st.integers(1, 6), st.integers(0, 10 ** 6))
+def test_ell_spmm_random_sparsity(n, m, K, k, seed):
+    rng = np.random.default_rng(seed)
+    cols, vals = _random_ell(rng, n, m, K, np.float32,
+                             pad_rows=int(rng.integers(0, n)))
+    X = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    out = ell_spmm(cols, vals, X, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ell_spmm_ref(cols, vals, X)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(6, 40), st.sampled_from(list(BLOCK_SIZES)),
+       st.integers(0, 10 ** 6))
+def test_bcsr_random_round_trip(n, bs, seed):
+    rng = np.random.default_rng(seed)
+    dense = np.where(rng.random((n, n)) < 0.15,
+                     rng.standard_normal((n, n)), 0.0)
+    A = CSR.from_dense(dense)
+    B = csr_to_bcsr(A, bs)
+    np.testing.assert_array_equal(B.to_dense(), dense)
+    X = rng.standard_normal((n, 3))
+    out = np.asarray(bcsr_apply_ref(jnp.asarray(B.bcols),
+                                    jnp.asarray(B.bvals),
+                                    jnp.asarray(X, dtype=jnp.float64)
+                                    if jax.config.jax_enable_x64
+                                    else jnp.asarray(X,
+                                                     dtype=jnp.float32)))
+    ref = dense @ X
+    np.testing.assert_allclose(out[:n], ref, rtol=2e-4, atol=2e-4)
+
+
+def test_spmv_kernel_on_7pt_operator():
+    """The laplace_3d_7pt path of test_kernels extended to the SpMM form."""
+    A = laplace_3d_7pt(6)
+    K = int(np.diff(A.indptr).max())
+    cols = np.full((A.nrows, K), -1, dtype=np.int32)
+    vals = np.zeros((A.nrows, K), dtype=np.float32)
+    lens = np.diff(A.indptr)
+    r = A.rows_expanded()
+    slot = np.arange(A.nnz) - np.repeat(A.indptr[:-1], lens)
+    cols[r, slot] = A.indices
+    vals[r, slot] = A.data
+    X = np.random.default_rng(0).standard_normal(
+        (A.ncols, 4)).astype(np.float32)
+    out = ell_spmm(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(X),
+                   interpret=True)
+    ref = np.stack([A.matvec(X[:, j].astype(np.float64)) for j in range(4)],
+                   axis=1)
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               rtol=2e-4, atol=2e-4)
