@@ -285,9 +285,14 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
+    try:
+        from benchmarks.serve_load import serving_latency_rows
+    except ImportError:
+        from serve_load import serving_latency_rows
     data = (rows(smoke=args.smoke) + cycle_smoother_rows(smoke=args.smoke)
             + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke)
-            + serving_rows(smoke=args.smoke))
+            + serving_rows(smoke=args.smoke)
+            + serving_latency_rows(smoke=args.smoke))
     print("name,us_per_call,derived")
     for name, us, derived in data:
         print(f"{name},{us:.2f},{derived}")

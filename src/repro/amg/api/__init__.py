@@ -55,14 +55,15 @@ from .sessions import (AMGSolver, BoundSolver, BytesBudgetPolicy, CacheEntry,
                        DistBoundSolver, EvictionPolicy, HostBoundSolver,
                        LRUPolicy, SESSION_CACHE_SIZE, SessionStore, TTLPolicy,
                        clear_sessions, session_count, session_nbytes)
-from .service import (AMGService, PRIORITY_CLASSES, ServiceReport,
-                      SolveRequest, SolverEngine, Ticket)
+from .service import (AMGService, PRIORITY_CLASSES, ServiceClosed,
+                      ServiceReport, SolveRequest, SolverEngine, Ticket)
 
 __all__ = [
     "AMGConfig", "AMGService", "AMGSolver", "BoundSolver",
     "BytesBudgetPolicy", "CacheEntry", "DistBoundSolver", "EvictionPolicy",
     "HostBoundSolver", "LRUPolicy", "PRIORITY_CLASSES",
-    "SESSION_CACHE_SIZE", "ServiceReport", "SessionStore", "SolveRequest",
+    "SESSION_CACHE_SIZE", "ServiceClosed", "ServiceReport", "SessionStore",
+    "SolveRequest",
     "SolverEngine", "TTLPolicy", "Ticket", "WIRE_SCHEMA", "WireError",
     "array_from_wire", "array_to_wire", "available_backends",
     "backend_class", "bind_hierarchy", "clear_sessions", "csr_from_wire",

@@ -45,10 +45,21 @@ from ..csr import CSR
 from ..solve import MultiSolveResult
 from .config import (AMGConfig, csr_from_wire, matrix_fingerprint,
                      solve_request_from_wire)
-from .sessions import AMGSolver, BoundSolver, LRUPolicy, SessionStore
+from .sessions import (AMGSolver, BoundSolver, BytesBudgetPolicy, LRUPolicy,
+                       SessionStore, _csr_nbytes)
 
 PRIORITY_CLASSES = {"interactive": 0, "default": 1, "batch": 2}
 _METHODS = ("solve", "pcg")
+
+
+class ServiceClosed(RuntimeError):
+    """The service was closed before this request could be executed.
+
+    Raised out of :meth:`Ticket.result` for requests still queued when
+    :meth:`AMGService.close` ran (always with ``flush=False``; with the
+    default flushing close only requests admitted during the shutdown race
+    see it) — a typed, immediate failure instead of a ``result(timeout=)``
+    expiry."""
 
 
 @dataclasses.dataclass
@@ -73,9 +84,26 @@ class Ticket:
         self._event = threading.Event()
         self._x: np.ndarray | None = None
         self._error: BaseException | None = None
+        self._cb_lock = threading.Lock()
+        self._callbacks: list = []
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def exception(self) -> BaseException | None:
+        """The solve-side failure, or None (only meaningful once done)."""
+        return self._error
+
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(ticket)`` when the request finishes (success or
+        failure).  Runs in the scheduler's thread — or immediately in the
+        caller's if the ticket is already done.  This is the hook the async
+        serving front-end bridges on (no polling thread per request)."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     def result(self, timeout: float | None = None) -> np.ndarray:
         """The solution ``x`` ([n], or [n, k] for a multi-RHS payload)."""
@@ -95,11 +123,18 @@ class Ticket:
     def _fulfill(self, x, diagnostics: dict) -> None:
         self._x = x
         self.diagnostics = diagnostics
-        self._event.set()
+        self._finish()
 
     def _fail(self, error: BaseException) -> None:
         self._error = error
-        self._event.set()
+        self._finish()
+
+    def _finish(self) -> None:
+        with self._cb_lock:
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
 
 
 @dataclasses.dataclass
@@ -110,6 +145,7 @@ class ServiceReport:
     stats: dict
     per_request: dict
     store: dict
+    matrices: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         s, st = self.stats, self.store
@@ -123,6 +159,11 @@ class ServiceReport:
             f"evictions={st['evictions']} expirations={st['expirations']} "
             f"setup_cost_total={st['setup_cost_total']:.3f}s",
         ]
+        if self.matrices:
+            m = self.matrices
+            lines.append(
+                f"matrices[{m['policy']}]: entries={m['entries']} "
+                f"bytes={m['bytes']} evictions={m['evictions']}")
         return "\n".join(lines)
 
 
@@ -163,7 +204,10 @@ class AMGService:
     LRU :class:`SessionStore` so eviction budgets and hit counters are
     scoped to this service (pass a shared store to pool sessions);
     ``priority_aging`` is the seconds of waiting that promote a group by
-    one priority class (starvation freedom).  ``clock`` is injectable for
+    one priority class (starvation freedom).  ``max_matrices`` /
+    ``max_matrix_bytes`` bound the matrix registry (LRU by count; with a
+    bytes budget, the cost-aware policy) — counters surface in
+    :meth:`report` as ``matrices``.  ``clock`` is injectable for
     deterministic scheduler tests.
     """
 
@@ -171,6 +215,8 @@ class AMGService:
                  coalesce_window: float = 0.0,
                  store: SessionStore | None = None,
                  priority_aging: float = 0.5,
+                 max_matrices: int = 64,
+                 max_matrix_bytes: int | None = None,
                  diagnostics_limit: int = 4096, clock=time.monotonic):
         self.config = config or AMGConfig()
         self.max_rhs = max(1, int(max_rhs))
@@ -179,11 +225,20 @@ class AMGService:
         self.store = store if store is not None else SessionStore(LRUPolicy())
         self.solver = AMGSolver(self.config, store=self.store)
         self._clock = clock
-        self._matrices: dict[str, tuple[CSR, str]] = {}
+        # the matrix registry is bounded (entry count, optionally bytes)
+        # through the same eviction machinery as the session store — a
+        # long-lived service whose session store drops cold sessions must
+        # not keep every matrix ever registered resident forever
+        policy = (BytesBudgetPolicy(max_matrix_bytes,
+                                    max_entries=max_matrices)
+                  if max_matrix_bytes is not None
+                  else LRUPolicy(max_matrices))
+        self._matrices: SessionStore = SessionStore(policy, clock=clock)
         self._groups: dict[tuple, _Group] = {}
         self._cond = threading.Condition()
         self._worker: threading.Thread | None = None
         self._stop = False
+        self._flush_on_stop = True
         self._next_rid = 0
         self.stats = {"requests": 0, "wire_requests": 0, "batches": 0,
                       "batched_rhs": 0, "setups": 0, "unconverged": 0,
@@ -208,17 +263,35 @@ class AMGService:
             self._worker.start()
         return self
 
-    def close(self) -> None:
-        """Flush every queued group (window ignored), then stop the worker."""
+    def close(self, flush: bool = True) -> None:
+        """Stop the worker.  ``flush=True`` (default) executes every queued
+        group first (window ignored); ``flush=False`` abandons the queue.
+        Either way, any request still un-executed when the worker has
+        stopped — the whole queue under ``flush=False``, shutdown-race
+        admissions under ``flush=True`` — fails immediately with a typed
+        :class:`ServiceClosed` instead of hanging until a
+        ``result(timeout=...)`` expires."""
         w = self._worker
-        if w is None:
-            return
+        if w is not None:
+            with self._cond:
+                self._stop = True
+                self._flush_on_stop = flush
+                self._cond.notify_all()
+            w.join()
+            self._worker = None
+            self._stop = False
+            self._flush_on_stop = True
+        self._fail_queued(ServiceClosed(
+            "AMGService was closed before this request was executed"))
+
+    def _fail_queued(self, error: BaseException) -> None:
         with self._cond:
-            self._stop = True
-            self._cond.notify_all()
-        w.join()
-        self._worker = None
-        self._stop = False
+            groups, self._groups = list(self._groups.values()), {}
+        for group in groups:
+            self.stats["errors"] += len(group.requests)
+            for p in group.requests:
+                self._record_diag(p.rid, {"error": repr(error)})
+                p.ticket._fail(error)
 
     def __enter__(self) -> "AMGService":
         return self.start()
@@ -227,10 +300,16 @@ class AMGService:
         self.close()
 
     # ----------------------------------------------------------- registration
-    def register(self, matrix_id: str, A: CSR) -> str:
+    def register(self, matrix_id: str, A: CSR, *,
+                 fingerprint: str | None = None) -> str:
         """Register a matrix under an id; its fingerprint is computed once
-        here and reused for every session lookup."""
-        self._matrices[matrix_id] = (A, matrix_fingerprint(A))
+        here (or passed in by a caller that already decoded it) and reused
+        for every session lookup.  The registry is bounded: the service's
+        eviction policy (count, optionally bytes) drops the least-valuable
+        registrations once over budget."""
+        self._matrices.put(matrix_id, (A, fingerprint or
+                                       matrix_fingerprint(A)),
+                           nbytes=_csr_nbytes(A))
         return matrix_id
 
     def register_wire(self, payload: dict) -> str:
@@ -238,17 +317,19 @@ class AMGService:
         content fingerprint (so the registration is idempotent and requests
         can address the matrix without any out-of-band id exchange)."""
         A, fp = csr_from_wire(payload)
-        self._matrices[fp] = (A, fp)
-        return fp
+        return self.register(fp, A, fingerprint=fp)
+
+    def _lookup_matrix(self, matrix_id: str) -> tuple[CSR, str]:
+        got = self._matrices.get(matrix_id)
+        if got is None:
+            raise KeyError(f"unknown matrix_id {matrix_id!r}; registered: "
+                           f"{sorted(self._matrices.keys())}")
+        return got
 
     def bound_for(self, matrix_id: str) -> BoundSolver:
         """The session for a registered matrix (setup on first use; later
         calls hit the session store)."""
-        try:
-            A, fp = self._matrices[matrix_id]
-        except KeyError:
-            raise KeyError(f"unknown matrix_id {matrix_id!r}; "
-                           f"registered: {sorted(self._matrices)}") from None
+        A, fp = self._lookup_matrix(matrix_id)
         misses = self.store.stats()["misses"]
         bound = self.solver.setup(A, fingerprint=fp)
         if self.store.stats()["misses"] > misses:
@@ -265,11 +346,7 @@ class AMGService:
         service config's; requests sharing (matrix, method, tol, maxiter)
         coalesce into one device trace when admitted within one window.
         """
-        try:
-            A, _ = self._matrices[matrix_id]
-        except KeyError:
-            raise KeyError(f"unknown matrix_id {matrix_id!r}; "
-                           f"registered: {sorted(self._matrices)}") from None
+        A, _ = self._lookup_matrix(matrix_id)
         if method not in _METHODS:
             raise ValueError(f"unknown method {method!r}; "
                              f"supported: {_METHODS}")
@@ -361,7 +438,8 @@ class AMGService:
             with self._cond:
                 while not self._groups and not self._stop:
                     self._cond.wait()
-                if not self._groups and self._stop:
+                if self._stop and (not self._groups
+                                   or not self._flush_on_stop):
                     return
                 now = self._clock()
                 ripe = [g for g in self._groups.values()
@@ -470,7 +548,8 @@ class AMGService:
         return ServiceReport(stats=dict(self.stats),
                              per_request={r: dict(d) for r, d in
                                           self.diagnostics.items()},
-                             store=self.store.stats())
+                             store=self.store.stats(),
+                             matrices=self._matrices.stats())
 
 
 # --------------------------------------------------------------------------

@@ -171,6 +171,10 @@ class SessionStore:
         with self._lock:
             return key in self._entries
 
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._entries)
+
     def get(self, key, default=None):
         now = self._clock()
         with self._lock:

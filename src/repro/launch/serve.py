@@ -20,11 +20,20 @@ Two engines share this entrypoint:
       PYTHONPATH=src python -m repro.launch.serve --solver amg --requests 16
       PYTHONPATH=src python -m repro.launch.serve --solver amg --wire \\
           --amg-backend dist --n 10 --coalesce-window 0.2
+
+* ``--solver amg --listen HOST:PORT`` — the AMGWire socket server
+  (:class:`~repro.serve.server.AMGWireServer`): multi-tenant admission
+  over length-prefixed JSON frames, each ``--tenant
+  NAME[:MAX_INFLIGHT[:MAX_MATRIX_BYTES]]`` getting its own service,
+  session store and quotas.  Drive it with
+  ``benchmarks/serve_load.py``::
+
+      PYTHONPATH=src python -m repro.launch.serve --solver amg \\
+          --listen 127.0.0.1:8571 --tenant alpha:32 --tenant beta:2
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 
@@ -62,42 +71,36 @@ def run_lm(args):
 def run_amg(args):
     import numpy as np
 
-    from ..amg.api import (AMGConfig, AMGService, csr_to_wire,
-                           solve_request_to_wire)
-    from ..amg.problems import laplace_3d
+    from ..amg.api import AMGConfig, AMGService
+    from ..serve.workload import (build_problems, default_tol, make_request,
+                                  matrix_payloads, rel_residual)
 
-    # the dist backend defaults to fp32, whose residual floor (~1e-7
-    # relative) sits above the host default tol — don't let every solve
-    # burn maxiter chasing an unreachable tolerance
-    tol = args.tol if args.tol is not None else (
-        1e-6 if args.amg_backend == "dist" else 1e-8)
+    tol = default_tol(args.amg_backend, args.tol)
     cfg = AMGConfig(backend=args.amg_backend, n_pods=args.n_pods,
                     lanes=args.lanes, tol=tol)
     svc = AMGService(cfg, max_rhs=args.batch,
                      coalesce_window=args.coalesce_window)
-    sizes = (args.n, max(4, args.n - 2))
-    mats = {}
-    for n in sizes:
-        A = laplace_3d(n)
-        if args.wire:
-            # wire-only operation: the matrix id IS the verified content
-            # fingerprint of the encoded payload (one real JSON byte hop)
-            mid = svc.register_wire(json.loads(json.dumps(csr_to_wire(A))))
-        else:
-            mid = svc.register(f"laplace3d_n{n}", A)
-        mats[mid] = A
+    # the matrix family and request stream are the same construction the
+    # open-loop socket load generator (benchmarks/serve_load.py) drives —
+    # the two serving harnesses stay honest against each other
+    mats = build_problems(args.n)
+    if args.wire:
+        # wire-only operation: the matrix id IS the verified content
+        # fingerprint of the encoded payload (one real JSON byte hop)
+        for payload in matrix_payloads(mats).values():
+            svc.register_wire(payload)
+    else:
+        for mid, A in mats.items():
+            svc.register(mid, A)
     ids = sorted(mats)
     rng = np.random.default_rng(0)
 
     def admit(rid):
         mid = ids[rid % len(ids)]
-        b = rng.standard_normal(mats[mid].nrows)
-        if args.wire:
-            payload = json.loads(json.dumps(solve_request_to_wire(
-                mid, b, method=args.method, rid=rid)))
-            ticket = svc.submit_wire(payload)
-        else:
-            ticket = svc.submit(mid, b, method=args.method, rid=rid)
+        b, payload = make_request(rng, mats, mid, method=args.method,
+                                  rid=rid)
+        ticket = (svc.submit_wire(payload) if args.wire
+                  else svc.submit(mid, b, method=args.method, rid=rid))
         return mid, b, ticket
 
     t0 = time.perf_counter()
@@ -110,10 +113,7 @@ def run_amg(args):
     dt = time.perf_counter() - t0
     worst = 0.0
     for mid, b, ticket in admitted:
-        A = mats[mid]
-        rel = (np.linalg.norm(b - A.matvec(out[ticket.rid]))
-               / np.linalg.norm(b))
-        worst = max(worst, rel)
+        worst = max(worst, rel_residual(mats[mid], out[ticket.rid], b))
     s = svc.stats
     mode = "wire" if args.wire else "direct"
     print(f"[serve/amg] {len(out)} solves ({len(ids)} matrices, "
@@ -126,6 +126,64 @@ def run_amg(args):
     print("[serve/amg] " + svc.report().summary().replace("\n", "\n[serve/amg] "))
     if worst > tol * 100:
         raise SystemExit(f"residual check failed: {worst:.2e}")
+
+
+def parse_tenant_spec(spec: str, config, *, max_rhs: int,
+                      coalesce_window: float):
+    """``NAME[:MAX_INFLIGHT[:MAX_MATRIX_BYTES]]`` -> (name, TenantSpec)."""
+    from ..serve import TenantSpec
+
+    name, _, rest = spec.partition(":")
+    if not name:
+        raise SystemExit(f"--tenant {spec!r}: empty tenant name")
+    parts = rest.split(":") if rest else []
+    try:
+        max_inflight = int(parts[0]) if parts and parts[0] else 32
+        max_bytes = (int(parts[1]) if len(parts) > 1 and parts[1]
+                     else None)
+    except ValueError:
+        raise SystemExit(f"--tenant {spec!r}: quotas must be integers "
+                         f"(NAME[:MAX_INFLIGHT[:MAX_MATRIX_BYTES]])")
+    return name, TenantSpec(config=config, max_inflight=max_inflight,
+                            max_matrix_bytes=max_bytes, max_rhs=max_rhs,
+                            coalesce_window=coalesce_window)
+
+
+def run_listen(args):
+    import asyncio
+
+    from ..amg.api import AMGConfig
+    from ..serve import AMGWireServer
+    from ..serve.workload import default_tol
+
+    tol = default_tol(args.amg_backend, args.tol)
+    cfg = AMGConfig(backend=args.amg_backend, n_pods=args.n_pods,
+                    lanes=args.lanes, tol=tol)
+    tenants = dict(
+        parse_tenant_spec(spec, cfg, max_rhs=args.batch,
+                          coalesce_window=args.coalesce_window)
+        for spec in (args.tenant or ["default"]))
+    host, _, port = args.listen.rpartition(":")
+    server = AMGWireServer(tenants)
+
+    async def _serve():
+        h, p = await server.start(host or "127.0.0.1", int(port or 0))
+        print(f"[serve/amg] AMGWire listening on {h}:{p} (backend="
+              f"{args.amg_backend}, tenants: "
+              + ", ".join(f"{n}[inflight<={t.max_inflight}]"
+                          for n, t in sorted(tenants.items()))
+              + ")", flush=True)
+        try:
+            await server.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            await server.aclose()
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        pass
 
 
 def main():
@@ -158,9 +216,20 @@ def main():
                     help="seconds the admission worker holds a group open "
                          "to coalesce same-matrix RHS across bursts "
                          "(0 = synchronous drain)")
+    ap.add_argument("--listen", metavar="HOST:PORT",
+                    help="run the AMGWire socket server instead of the "
+                         "in-process harness (--solver amg only); PORT 0 "
+                         "picks a free port")
+    ap.add_argument("--tenant", action="append", metavar="SPEC",
+                    help="tenant spec NAME[:MAX_INFLIGHT[:MAX_MATRIX_"
+                         "BYTES]], repeatable (default: one 'default' "
+                         "tenant); only with --listen")
     args = ap.parse_args()
 
     if args.solver == "amg":
+        if args.listen:
+            run_listen(args)
+            return
         run_amg(args)
     else:
         if not args.arch:

@@ -1,3 +1,33 @@
-from .engine import Engine, Request, prefill_to_decode_cache
+"""Serving front-ends: the LM generation engine and the AMGWire socket
+server.
 
-__all__ = ["Engine", "Request", "prefill_to_decode_cache"]
+The engine (jax-backed) is imported lazily so the pure-CPython serving
+path — :mod:`repro.serve.server` / :mod:`repro.serve.client` /
+:mod:`repro.serve.wire` — can run (tests, load generator, CI smoke)
+without paying the jax import, and on hosts without an accelerator
+runtime at all when the tenant configs stay on the host backend.
+"""
+from .client import AMGWireClient, Rejected, RemoteError
+from .server import (AMGWireServer, ServerThread, TenantSpec,
+                     priority_class_name, ticket_future)
+from .wire import (BadFrame, FrameTooLarge, MAX_FRAME_BYTES, REQUEST_KINDS,
+                   RESPONSE_KINDS, check_request_envelope, encode_frame,
+                   error_frame, read_frame, response_frame)
+
+__all__ = [
+    "AMGWireClient", "AMGWireServer", "BadFrame", "Engine", "FrameTooLarge",
+    "MAX_FRAME_BYTES", "REQUEST_KINDS", "RESPONSE_KINDS", "Rejected",
+    "RemoteError", "Request", "ServerThread", "TenantSpec",
+    "check_request_envelope", "encode_frame", "error_frame",
+    "prefill_to_decode_cache", "priority_class_name", "read_frame",
+    "response_frame", "ticket_future",
+]
+
+_ENGINE_EXPORTS = ("Engine", "Request", "prefill_to_decode_cache")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

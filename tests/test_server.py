@@ -1,0 +1,363 @@
+"""AMGWire server tests: framing, multi-tenant admission, backpressure,
+and the end-to-end socket error paths.
+
+Everything here runs real sockets on the loopback against a
+:class:`~repro.serve.server.ServerThread` (host backend — deterministic,
+no accelerator), driven by the blocking
+:class:`~repro.serve.client.AMGWireClient`.  The acceptance property
+under test throughout: every failure mode — malformed JSON, schema
+mismatch, unknown tenant/matrix, over-quota submission, even server
+shutdown with requests queued — surfaces as a *structured* frame on a
+*surviving* connection, never a dropped socket or a hang.
+"""
+import asyncio
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.amg.api import AMGConfig, clear_sessions, csr_to_wire
+from repro.amg.api.service import AMGService, ServiceClosed
+from repro.serve import (AMGWireClient, BadFrame, FrameTooLarge, Rejected,
+                         RemoteError, ServerThread, TenantSpec,
+                         encode_frame, read_frame, ticket_future)
+from repro.serve.workload import (build_problems, make_request,
+                                  rel_residual)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_sessions():
+    clear_sessions()
+    yield
+    clear_sessions()
+
+
+@pytest.fixture(scope="module")
+def problems():
+    return build_problems(6, count=1)
+
+
+def _spec(**kw):
+    kw.setdefault("config", AMGConfig())
+    return TenantSpec(**kw)
+
+
+# ---------------------------------------------------------------- framing
+
+
+def _feed(*chunks: bytes) -> asyncio.StreamReader:
+    reader = asyncio.StreamReader()
+    for chunk in chunks:
+        reader.feed_data(chunk)
+    reader.feed_eof()
+    return reader
+
+
+def test_frame_round_trip():
+    async def go():
+        frames = [{"schema": 1, "kind": "ping", "seq": 0},
+                  {"a": [1, 2, 3], "b": None}]
+        reader = _feed(b"".join(encode_frame(f) for f in frames))
+        assert await read_frame(reader) == frames[0]
+        assert await read_frame(reader) == frames[1]
+        assert await read_frame(reader) is None          # clean EOF
+    asyncio.run(go())
+
+
+def test_frame_errors_keep_stream_aligned():
+    async def go():
+        good = encode_frame({"ok": 1})
+        # oversized frame (declared length > max) is drained, then the
+        # stream picks up the next frame intact
+        big = json.dumps({"pad": "x" * 256}).encode()
+        import struct
+        reader = _feed(struct.pack(">I", len(big)) + big, good)
+        with pytest.raises(FrameTooLarge):
+            await read_frame(reader, max_frame=64)
+        assert await read_frame(reader, max_frame=64) == {"ok": 1}
+        # non-JSON body -> BadFrame, next frame still decodes
+        bad = b"not json at all"
+        reader = _feed(struct.pack(">I", len(bad)) + bad, good)
+        with pytest.raises(BadFrame):
+            await read_frame(reader)
+        assert await read_frame(reader) == {"ok": 1}
+        # a JSON body that is not an object is also a BadFrame
+        arr = json.dumps([1, 2]).encode()
+        reader = _feed(struct.pack(">I", len(arr)) + arr)
+        with pytest.raises(BadFrame):
+            await read_frame(reader)
+        # mid-frame disconnect reads as EOF, not an exception
+        reader = _feed(struct.pack(">I", 100) + b"only-ten-b")
+        assert await read_frame(reader) is None
+    asyncio.run(go())
+
+
+# ----------------------------------------------------- ticket adapter
+
+
+def test_ticket_future_resolves_on_loop(problems):
+    mid, A = next(iter(problems.items()))
+    b = A.matvec(np.ones(A.nrows))
+
+    async def go():
+        svc = AMGService(AMGConfig())
+        svc.register(mid, A)
+        with svc:
+            fut = ticket_future(svc.submit(mid, b, method="pcg"),
+                                asyncio.get_running_loop())
+            x, diag = await asyncio.wait_for(fut, 60)
+        assert diag["converged"]
+        assert rel_residual(A, x, b) < 1e-6
+        # a failed ticket surfaces its exception through the future
+        svc2 = AMGService(AMGConfig())
+        svc2.register(mid, A)
+        t = svc2.submit(mid, b)
+        fut2 = ticket_future(t, asyncio.get_running_loop())
+        svc2.close(flush=False)              # fails the queued ticket
+        with pytest.raises(ServiceClosed):
+            await asyncio.wait_for(fut2, 60)
+    asyncio.run(go())
+
+
+# ------------------------------------------------------- happy path
+
+
+def test_register_solve_round_trip(problems):
+    mid, A = next(iter(problems.items()))
+    rng = np.random.default_rng(0)
+    with ServerThread({"t0": _spec()}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            assert c.ping()["tenants"] == ["t0"]
+            reg = c.register("t0", csr_to_wire(A))
+            assert reg["matrix"] == mid
+            b, payload = make_request(rng, problems, mid, method="pcg")
+            x, diag = c.solve("t0", payload)
+            assert diag["converged"]
+            assert rel_residual(A, x, b) < 1e-6
+            st = c.stats()["tenants"]["t0"]
+            assert st["registered"] == 1
+            assert st["admitted"] == st["completed"] == 1
+            assert st["rejected"] == st["errors"] == 0
+
+
+def test_pipelined_out_of_order_completion(problems):
+    """Many pipelined solves down one connection, harvested in reverse
+    send order — seq correlation matches each response to its request."""
+    mid, A = next(iter(problems.items()))
+    rng = np.random.default_rng(1)
+    with ServerThread({"t0": _spec(max_inflight=64)}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            c.register("t0", csr_to_wire(A))
+            sent = []
+            for _ in range(12):
+                b, payload = make_request(rng, problems, mid)
+                sent.append((b, c.send("solve", tenant="t0",
+                                       payload=payload)))
+            for b, seq in reversed(sent):
+                frame = c.recv(seq, timeout=120)
+                assert frame["kind"] == "solution"
+                from repro.amg.api import array_from_wire
+                assert rel_residual(A, array_from_wire(frame["x"]), b) < 1e-6
+
+
+# -------------------------------------------------- wire error paths
+
+
+def test_malformed_json_yields_error_frame_and_connection_survives(problems):
+    mid, A = next(iter(problems.items()))
+    with ServerThread({"t0": _spec()}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            c.send_raw(b"{this is not json")
+            frame = c.recv_unmatched()
+            assert frame["kind"] == "error"
+            assert frame["code"] == 400
+            assert frame["error"] == "BadFrame"
+            # same connection keeps working
+            assert c.ping()["kind"] == "pong"
+            assert c.register("t0", csr_to_wire(A))["matrix"] == mid
+
+
+def test_schema_version_mismatch_yields_error_frame():
+    with ServerThread({"t0": _spec()}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            c.send_raw(json.dumps({"schema": 99, "kind": "ping",
+                                   "seq": 3}).encode())
+            frame = c.recv_unmatched()
+            assert frame["kind"] == "error" and frame["code"] == 400
+            assert "schema version mismatch" in frame["message"]
+            assert frame["seq"] == 3          # correlation id echoed
+            # unknown kind is the same class of structured failure
+            c.send_raw(json.dumps({"schema": 1, "kind": "nope",
+                                   "seq": 4}).encode())
+            frame = c.recv_unmatched()
+            assert frame["kind"] == "error" and frame["code"] == 400
+            assert "unknown frame kind" in frame["message"]
+            assert c.ping()["kind"] == "pong"
+
+
+def test_unknown_tenant_and_matrix_yield_404(problems):
+    mid, A = next(iter(problems.items()))
+    rng = np.random.default_rng(2)
+    with ServerThread({"t0": _spec()}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            _, payload = make_request(rng, problems, mid)
+            with pytest.raises(RemoteError) as ei:
+                c.solve("ghost", payload)
+            assert ei.value.code == 404
+            # unknown matrix id on a real tenant: the service's KeyError
+            # crosses the wire as a structured 404 and is accounted
+            with pytest.raises(RemoteError) as ei:
+                c.solve("t0", payload)
+            assert ei.value.code == 404
+            assert ei.value.error == "KeyError"
+            st = c.stats()["tenants"]["t0"]
+            assert st["errors"] == 1
+            assert st["service"]["errors"] == 0   # rejected pre-admission
+            assert c.ping()["kind"] == "pong"
+
+
+def test_strict_codec_rejection_crosses_the_wire(problems):
+    """An unknown-key payload is refused by the inner codec's strict
+    decoder; the server relays it as a 400 WireError frame."""
+    mid, A = next(iter(problems.items()))
+    rng = np.random.default_rng(3)
+    with ServerThread({"t0": _spec()}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            c.register("t0", csr_to_wire(A))
+            _, payload = make_request(rng, problems, mid)
+            payload["surprise"] = True
+            with pytest.raises(RemoteError) as ei:
+                c.solve("t0", payload)
+            assert ei.value.code == 400
+            assert ei.value.error == "WireError"
+            assert "unknown key" in str(ei.value)
+            # tampered matrix payload: fingerprint verification fails
+            bad = csr_to_wire(A)
+            bad["fingerprint"] = "0" * 40
+            with pytest.raises(RemoteError) as ei:
+                c.register("t0", bad)
+            assert ei.value.code == 400 and ei.value.error == "WireError"
+            assert c.stats()["tenants"]["t0"]["errors"] == 2
+
+
+# ------------------------------------------------- quotas + shedding
+
+
+def test_matrix_byte_quota_rejects_with_429(problems):
+    mid, A = next(iter(problems.items()))
+    with ServerThread({"t0": _spec(max_matrix_bytes=10)}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            with pytest.raises(Rejected) as ei:
+                c.register("t0", csr_to_wire(A))
+            assert ei.value.frame["code"] == 429
+            assert ei.value.frame["reason"] == "matrix byte quota"
+            st = c.stats()["tenants"]["t0"]
+            assert st["rejected"] == 1 and st["registered"] == 0
+            assert c.ping()["kind"] == "pong"
+
+
+def test_overload_sheds_batch_before_interactive(problems):
+    """With max_inflight=2 the batch class admits at most 1 in-flight
+    request while interactive may fill both slots; a huge coalescing
+    window keeps admitted work queued so the counters are deterministic.
+    """
+    mid, A = next(iter(problems.items()))
+    rng = np.random.default_rng(4)
+    spec = _spec(max_inflight=2, coalesce_window=120.0)
+    with ServerThread({"t0": spec}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            c.register("t0", csr_to_wire(A))
+
+            def send(priority):
+                _, payload = make_request(rng, problems, mid,
+                                          priority=priority)
+                return c.send("solve", tenant="t0", payload=payload)
+
+            s1 = send("batch")                    # occupies the 1 batch slot
+            time.sleep(0.2)                       # let admission land
+            s2 = send("batch")                    # over the batch limit
+            frame = c.recv(s2, timeout=60)
+            assert frame["kind"] == "rejected" and frame["code"] == 429
+            assert frame["priority"] == "batch"
+            assert frame["limit"] == 1
+            # interactive still has headroom (limit == max_inflight == 2)
+            s3 = send("interactive")
+            time.sleep(0.2)
+            s4 = send("interactive")              # now the tenant is full
+            frame = c.recv(s4, timeout=60)
+            assert frame["kind"] == "rejected"
+            assert frame["priority"] == "interactive"
+            assert frame["limit"] == 2
+            st = c.stats()["tenants"]["t0"]
+            assert st["admitted"] == 2 and st["rejected"] == 2
+            assert st["rejected_by_class"] == {"batch": 1,
+                                               "interactive": 1}
+
+
+def test_shutdown_fails_queued_solves_with_structured_503(problems):
+    mid, A = next(iter(problems.items()))
+    rng = np.random.default_rng(5)
+    srv = ServerThread({"t0": _spec(max_inflight=4,
+                                    coalesce_window=120.0)})
+    srv.__enter__()
+    try:
+        c = AMGWireClient.connect(srv.host, srv.port)
+        c.register("t0", csr_to_wire(A))
+        _, payload = make_request(rng, problems, mid)
+        seq = c.send("solve", tenant="t0", payload=payload)
+        time.sleep(0.2)                           # admission lands
+    finally:
+        srv.__exit__(None, None, None)            # close with it queued
+    frame = c.recv(seq, timeout=60)
+    assert frame["kind"] == "error"
+    assert frame["code"] == 503
+    assert frame["error"] == "ServiceClosed"
+    c.close()
+
+
+# -------------------------------------------------- concurrency scale
+
+
+def test_32_concurrent_connections_two_tenants(problems):
+    """32 live connections across two tenants, all solving at once: every
+    response is structured, nothing drops, both tenants' accounting adds
+    up."""
+    mid, A = next(iter(problems.items()))
+    tenants = {"alpha": _spec(max_inflight=64),
+               "beta": _spec(max_inflight=64)}
+    names = sorted(tenants)
+    results, errors = [], []
+    with ServerThread(tenants) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as admin:
+            for t in names:
+                admin.register(t, csr_to_wire(A))
+
+            def worker(i):
+                rng = np.random.default_rng(100 + i)
+                try:
+                    with AMGWireClient.connect(srv.host, srv.port) as c:
+                        b, payload = make_request(rng, problems, mid,
+                                                  priority="interactive")
+                        x, diag = c.solve(names[i % 2], payload,
+                                          timeout=120)
+                        results.append(rel_residual(A, x, b))
+                except Exception as e:            # pragma: no cover
+                    errors.append(e)
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(32)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=180)
+            assert not errors
+            assert len(results) == 32
+            assert max(results) < 1e-6
+            st = admin.stats()
+            assert st["dropped_connections"] == 0
+            for name in names:
+                ts = st["tenants"][name]
+                assert ts["completed"] == 16
+                assert ts["errors"] == 0

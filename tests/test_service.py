@@ -206,6 +206,79 @@ def test_worker_close_flushes_queue(problem):
     assert svc.stats["batches"] == 1
 
 
+def test_close_fails_queued_tickets_with_service_closed(problem):
+    """close(flush=False) must not leave never-executed tickets hanging:
+    they fail immediately with the typed ServiceClosed, are counted as
+    errors, and leave a diagnostics record."""
+    from repro.amg.api import ServiceClosed
+
+    A, _ = problem
+    svc = _service(coalesce_window=60.0)
+    svc.register("m", A)
+    svc.start()
+    tickets = [svc.submit("m", np.ones(A.nrows), rid=r) for r in (7, 8)]
+    svc.close(flush=False)                     # abandon the queue
+    for t in tickets:
+        assert t.done()
+        assert isinstance(t.exception(), ServiceClosed)
+        with pytest.raises(ServiceClosed):
+            t.result(timeout=0)
+    assert svc.stats["errors"] == 2
+    assert svc.stats["batches"] == 0           # nothing executed
+    assert "ServiceClosed" in svc.diagnostics[7]["error"]
+    # a worker-less service behaves the same (nothing to join, queue
+    # still failed typed instead of the old result() timeout hang)
+    svc2 = _service()
+    svc2.register("m", A)
+    t = svc2.submit("m", np.ones(A.nrows))
+    svc2.close(flush=False)
+    assert isinstance(t.exception(), ServiceClosed)
+
+
+def test_ticket_done_callbacks_fire_once_each(problem):
+    """add_done_callback runs on completion (scheduler thread) or
+    immediately when the ticket is already done — the hook the async
+    front-end's awaitable adapter bridges on."""
+    A, _ = problem
+    svc = _service()
+    svc.register("m", A)
+    seen = []
+    t = svc.submit("m", np.ones(A.nrows))
+    t.add_done_callback(lambda tk: seen.append(("pre", tk.done())))
+    svc.drain()
+    assert seen == [("pre", True)]
+    t.add_done_callback(lambda tk: seen.append(("post", tk.done())))
+    assert seen == [("pre", True), ("post", True)]
+
+
+def test_matrix_registry_is_bounded(problem):
+    """The matrix registry reuses the store eviction machinery: LRU by
+    count (max_matrices), or the cost-aware bytes budget — a long-lived
+    service cannot grow its registration table without limit."""
+    mats = {f"m{i}": laplace_3d(4 + i) for i in range(3)}
+    svc = _service(max_matrices=2)
+    for mid, M in mats.items():
+        svc.register(mid, M)
+    assert sorted(svc._matrices.keys()) == ["m1", "m2"]   # m0 evicted LRU
+    with pytest.raises(KeyError) as ei:
+        svc.submit("m0", np.ones(mats["m0"].nrows))
+    assert "m1" in str(ei.value)               # message lists registered ids
+    rep = svc.report()
+    assert rep.matrices["entries"] == 2
+    assert rep.matrices["evictions"] == 1
+    assert rep.matrices["bytes"] > 0
+    assert "matrices[lru]" in rep.summary()
+    # bytes budget variant: the registry sheds down to the budget
+    one = svc._matrices.stats()["bytes"] // 2  # fits ~1 of the 2 resident
+    svc2 = _service(max_matrix_bytes=int(one * 1.4))
+    for mid, M in mats.items():
+        svc2.register(mid, M)
+    st = svc2._matrices.stats()
+    assert st["policy"] == "bytes_budget"
+    assert st["bytes"] <= int(one * 1.4)
+    assert st["evictions"] >= 1
+
+
 # ------------------------------------------------------------------- wire
 def test_wire_only_operation(problem):
     """Register + solve purely through encoded payloads (host half of
