@@ -67,11 +67,86 @@ def rows(smoke: bool | None = None, cycles: int | None = None):
                     f"conv={res.avg_conv_factor:.3f};{per_level}"))
         if strat == "auto":
             # one row per (level, op): the model-selected strategy + its
-            # modeled comm seconds (the quantity the paper's Figs. 14/15 plot)
+            # modeled comm seconds (the quantity the paper's Figs. 14/15
+            # plot).  ``us_per_call`` stays a wall-clock-style column (here
+            # the modeled phase time, honestly labeled in ``derived`` as
+            # modeled_us) so check_bench can gate the field structurally
+            # without special-casing these rows.
             for r in dh.selection_table():
                 modeled = r["modeled"].get(r["strategy"], 0.0)
                 out.append((f"dist_solve_auto_L{r['level']}_{r['op']}",
-                            modeled * 1e6, r["strategy"]))
+                            modeled * 1e6,
+                            f"strategy={r['strategy']};"
+                            f"modeled_us={modeled * 1e6:.3f};"
+                            f"level={r['level']};op={r['op']}"))
+    return out
+
+
+def overlap_rows(smoke: bool | None = None, cycles: int | None = None):
+    """Per-level on/off operator splits + serial-vs-overlapped cycle timings.
+
+    The hierarchy is lowered with the *measured* machine parameters
+    (:func:`benchmarks.pingpong_model.measure_machine_params`), so the
+    overlap-aware selection — max(T_comm, T_on) + T_off — runs on data.
+    One ``dist_overlap_L{l}`` row per level records the on/off nnz split and
+    the modeled overlap efficiency; one ``dist_overlap_cycle_{V,W}`` row per
+    cycle shape times the same fused program with ``overlap`` on vs off
+    (wall clock — check_bench gates these structurally, never by magnitude).
+    """
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+
+    if jax.device_count() < 2:      # nothing to overlap on one device;
+        return []                   # the standalone entrypoint has 8
+    import numpy as np
+
+    from benchmarks.pingpong_model import measure_machine_params
+    from repro.amg import SolveOptions, setup, solve
+    from repro.amg.dist_solve import DistHierarchy
+    from repro.amg.problems import laplace_3d
+    from repro.core.perf_model import overlap_time
+
+    n = 8 if smoke else 12
+    cycles = cycles or (3 if smoke else 10)
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    params = measure_machine_params(n_pods=n_pods, lanes=lanes)
+    A = laplace_3d(n)
+    h = setup(A, solver="rs", max_coarse=30)   # ≥3 levels so W revisits
+    b = A.matvec(np.ones(A.nrows))
+    dh = DistHierarchy.build(h, n_pods, lanes, params=params)
+    out = []
+    for l, dl in enumerate(dh.levels):
+        oo = dl.onoff
+        t_ov = overlap_time(oo["t_comm"], oo["t_on"], oo["t_off"])
+        out.append((
+            f"dist_overlap_L{l}", t_ov * 1e6,
+            f"on_nnz={oo['on_nnz']};off_nnz={oo['off_nnz']};"
+            f"local_nnz={oo['local_nnz']};"
+            f"halo_empty={int(oo['halo_empty'])};"
+            f"eff_modeled={oo['eff_modeled']:.4f};"
+            f"strategy={dl.strategies.get('spmv_A', '?')};"
+            f"machine={params.name}"))
+
+    def timed(opts):
+        solve(h, b, maxiter=1, tol=0.0, opts=opts, backend="dist", dist=dh)
+        t0 = time.perf_counter()
+        solve(h, b, maxiter=cycles, tol=0.0, opts=opts, backend="dist",
+              dist=dh)
+        return (time.perf_counter() - t0) / cycles * 1e6
+
+    for cycle in ("V", "W"):
+        opts = SolveOptions(cycle=cycle)
+        dh.overlap = True
+        t_overlap = timed(opts)
+        dh.overlap = False
+        t_serial = timed(opts)
+        dh.overlap = True
+        out.append((
+            f"dist_overlap_cycle_{cycle}", t_overlap,
+            f"serial_us={t_serial:.2f};overlap_us={t_overlap:.2f};"
+            f"speedup={t_serial / max(t_overlap, 1e-9):.3f};"
+            f"mesh={n_pods}x{lanes};n={A.nrows};cycles={cycles}"))
     return out
 
 
@@ -290,6 +365,7 @@ def main(argv=None) -> None:
     except ImportError:
         from serve_load import serving_latency_rows
     data = (rows(smoke=args.smoke) + cycle_smoother_rows(smoke=args.smoke)
+            + overlap_rows(smoke=args.smoke)
             + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke)
             + serving_rows(smoke=args.smoke)
             + serving_latency_rows(smoke=args.smoke))

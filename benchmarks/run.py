@@ -9,6 +9,7 @@ from repro.core.perf_model import BLUE_WATERS, QUARTZ
 
 MODULES = [
     ("fig8_9", lambda: pingpong_model.rows()),
+    ("machine_measured", lambda: pingpong_model.measured_rows(smoke=True)),
     ("fig14_15", lambda: comm_strategies.rows()),
     ("fig2_4", lambda: amg_levels.rows()),
     ("fig16_17_bw", lambda: amg_scaling.rows("graddiv", BLUE_WATERS)),
@@ -19,6 +20,7 @@ MODULES = [
     ("fig21", lambda: ptap_sweeps.rows()),
     ("dist_solve", lambda: dist_solve.rows(smoke=True)),
     ("dist_solve_cycles", lambda: dist_solve.cycle_smoother_rows(smoke=True)),
+    ("dist_solve_overlap", lambda: dist_solve.overlap_rows(smoke=True)),
     ("dist_solve_weak", lambda: dist_solve.weak_rows(smoke=True)),
     ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
     ("dist_solve_serving", lambda: dist_solve.serving_rows(smoke=True)),

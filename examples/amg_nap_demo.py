@@ -53,6 +53,17 @@ p50/p99, batch traffic on the starved tenant was shed with explicit
 ``rejected`` frames — zero dropped connections, zero unstructured
 errors.
 
+Part 8 (overlap): the on/off-process operator split executed.  Every
+level's local block is lowered as ``A_on`` (halo-free columns) plus
+``A_off`` (halo columns only), the halo exchange is issued *before* the
+on-product so XLA's scheduler can hide it, and levels whose halo is empty
+skip the exchange entirely.  The machine model is **measured on this host
+mesh** (ring ping-pongs fitted to the postal model, a local SpMV flop
+rate), the per-level table prints the split with the modeled overlap
+efficiency max(T_comm, T_on) + T_off buys, and the same fused V-cycle is
+then timed with ``overlap`` on vs off — the serial path is the parity
+oracle, bit-identical histories, only the schedule differs.
+
     PYTHONPATH=src python examples/amg_nap_demo.py
 """
 import os
@@ -358,6 +369,57 @@ def wire_serving_demo():
           "failure a structured frame")
 
 
+def overlap_demo(n_pods: int = 2, lanes: int = 4):
+    import time
+
+    sys.path.insert(0, ".")                   # benchmarks/ off the repo root
+    from benchmarks.pingpong_model import measure_machine_params
+    from repro.amg import SolveOptions, solve
+    from repro.core.perf_model import overlap_time
+
+    from repro.amg.dist_solve import DistHierarchy
+
+    A = laplace_3d(10)
+    b = A.matvec(np.ones(A.nrows))
+    print(f"\n=== overlapped halo exchange: on/off split, {A.nrows} dofs "
+          f"on a {n_pods}x{lanes} mesh ===")
+    # postal-model fit + SpMV flop rate measured on THIS mesh, so the
+    # overlap-aware selection runs on data rather than documented constants
+    params = measure_machine_params("demo_mesh", n_pods=n_pods, lanes=lanes)
+    p = params.inter[0]
+    print(f"measured: inter alpha={p.alpha * 1e6:.2f}µs Rb={p.Rb:.2e}B/s, "
+          f"Rf={params.Rf:.2e} flop/s")
+    h = setup(A, solver="rs", max_coarse=30)
+    dh = DistHierarchy.build(h, n_pods, lanes, params=params)
+    print(f"{'lvl':>3} {'on_nnz':>8} {'off_nnz':>8} {'halo':>5} "
+          f"{'strategy':>9} {'overlap(µs)':>11} {'eff':>6}")
+    for l, dl in enumerate(dh.levels):
+        oo = dl.onoff
+        t_ov = overlap_time(oo["t_comm"], oo["t_on"], oo["t_off"])
+        halo = "  —  " if oo["halo_empty"] else "yes"
+        print(f"{l:>3} {oo['on_nnz']:>8} {oo['off_nnz']:>8} {halo:>5} "
+              f"{dl.strategies.get('spmv_A', '?'):>9} {t_ov * 1e6:>11.2f} "
+              f"{oo['eff_modeled']:>6.1%}")
+        assert oo["on_nnz"] + oo["off_nnz"] == oo["local_nnz"]
+
+    def timed(reps=5):
+        opts = SolveOptions(cycle="V")
+        solve(h, b, maxiter=1, tol=0.0, opts=opts, backend="dist", dist=dh)
+        t0 = time.perf_counter()
+        solve(h, b, maxiter=reps, tol=0.0, opts=opts, backend="dist",
+              dist=dh)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    t_ov = timed()
+    dh.overlap = False                        # the serial parity oracle
+    t_ser = timed()
+    dh.overlap = True
+    print(f"measured V-cycle: overlap {t_ov:.0f}µs vs serial {t_ser:.0f}µs "
+          f"({t_ser / max(t_ov, 1e-9):.2f}x)")
+    print("overlap demo OK: split partitions every level, exchange hidden "
+          "behind the on-product")
+
+
 def main():
     simulator_study()
     dist_solve_demo()
@@ -366,6 +428,7 @@ def main():
     serving_demo()
     kernel_selection_demo()
     wire_serving_demo()
+    overlap_demo()
 
 
 if __name__ == "__main__":

@@ -83,6 +83,9 @@ class AMGConfig:
     use_kernel: bool | None = None       # None = auto (Pallas ELL on TPU)
     interpret: bool | None = None        # None = auto (interpret off-TPU)
     reduce_strategy: str = "nap3"        # norms/dots: "nap3" | "flat"
+    # halo-exchange/compute overlap in every distributed apply; False keeps
+    # the serial fused form (the parity oracle)
+    overlap: bool = True
 
     def __post_init__(self):
         if self.dtype not in _DTYPES:
@@ -170,7 +173,8 @@ class AMGConfig:
                     params=MACHINES[self.machine], strategy=self.strategy,
                     dtype=dtype, use_kernel=self.use_kernel,
                     interpret=self.interpret,
-                    reduce_strategy=self.reduce_strategy)
+                    reduce_strategy=self.reduce_strategy,
+                    overlap=self.overlap)
 
 
 def matrix_fingerprint(A: CSR) -> str:

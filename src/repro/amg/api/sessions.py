@@ -577,7 +577,7 @@ class AMGSolver:
         base = (fp, tuple(sorted(c.setup_kwargs().items())),
                 c.n_pods, c.lanes, c.strategy, c.machine)
         skey = base + ("dist_lowered", c.dtype, c.use_kernel, c.interpret,
-                       c.reduce_strategy)
+                       c.reduce_strategy, c.overlap)
         dh = self.setup_store.get(skey)
         if dh is None:
             pkey = base + ("dist_partitioned",)

@@ -51,7 +51,8 @@ import numpy as np
 
 from ..core.compat import shard_map
 from ..core.nap_collectives import hier_all_gather, hier_psum
-from ..core.perf_model import TPU_V5E, MachineParams
+from ..core.perf_model import (TPU_V5E, MachineParams, overlap_efficiency,
+                               spmv_compute_times)
 from ..core.selector import select
 from ..core.topology import Partition, Topology
 from .dist import rect_vector_graph, schedule_comm_stats
@@ -86,6 +87,9 @@ class DistLevel:
     # per-op modeled message/byte counts for the selected strategy
     # (schedule_comm_stats), consumed by cycle_comm_stats
     comm_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
+    # on/off-process split of A (nnz counts, modeled t_on/t_off/t_comm and
+    # overlap efficiency) — what the overlap-aware selector saw
+    onoff: dict = dataclasses.field(default_factory=dict)
     # per-device diagonal square blocks of A (local column ids) — the
     # source the block smoothers' dense factors are lowered from
     local_A: list | None = None
@@ -158,6 +162,10 @@ class DistHierarchy:
         # the legacy jax.vmap-over-columns trace, retained as the parity
         # oracle the native path is tested against
         self.native_spmm = True
+        # halo-exchange/compute overlap: True (default) traces every apply
+        # as exchange‖A_on·x then +A_off·halo; False keeps the fused serial
+        # form (halo_exchange → A·[x|halo]) as the parity oracle
+        self.overlap = True
         # program key (traced-knob subset of opts) -> (programs dict,
         # run arrays); see :meth:`programs`
         self._programs: dict[tuple, tuple] = {}
@@ -180,19 +188,23 @@ class DistHierarchy:
               strategies: tuple[str, ...] = SOLVE_STRATEGIES,
               dtype=jnp.float32, mesh=None, use_kernel: bool | None = None,
               interpret: bool | None = None,
-              reduce_strategy: str = "nap3") -> "DistHierarchy":
+              reduce_strategy: str = "nap3",
+              overlap: bool = True) -> "DistHierarchy":
         """Lower ``h`` onto the mesh, selecting each operator's strategy.
 
         ``strategy="auto"`` picks per level and per operator from the
         performance models; any explicit strategy name forces it everywhere.
+        ``overlap=False`` keeps the serial fused applies (parity oracle).
         """
         mesh, use_kernel, interpret = cls._resolve_mesh(
             n_pods, lanes, mesh, use_kernel, interpret)
         levels = cls._lower_levels(h.levels, n_pods, lanes, params=params,
                                    strategy=strategy, strategies=strategies,
                                    dtype=dtype)
-        return cls(h, n_pods, lanes, levels, mesh, dtype, use_kernel,
+        self = cls(h, n_pods, lanes, levels, mesh, dtype, use_kernel,
                    interpret, reduce_strategy)
+        self.overlap = bool(overlap)
+        return self
 
     @classmethod
     def from_partitioned(cls, plevels, n_pods: int, lanes: int, *,
@@ -203,7 +215,8 @@ class DistHierarchy:
                          dtype=jnp.float32, mesh=None,
                          use_kernel: bool | None = None,
                          interpret: bool | None = None,
-                         reduce_strategy: str = "nap3") -> "DistHierarchy":
+                         reduce_strategy: str = "nap3",
+                         overlap: bool = True) -> "DistHierarchy":
         """Lower levels that are **already partitioned** (born on the mesh).
 
         ``plevels`` mirror :class:`~repro.amg.hierarchy.Level` but each
@@ -223,6 +236,7 @@ class DistHierarchy:
             levels[rec.level].modeled[rec.op] = dict(rec.modeled)
         self = cls(None, n_pods, lanes, levels, mesh, dtype, use_kernel,
                    interpret, reduce_strategy)
+        self.overlap = bool(overlap)
         self.setup_records = list(setup_records or ())
         return self
 
@@ -246,11 +260,14 @@ class DistHierarchy:
         topo = Topology(n_nodes=n_pods, ppn=lanes)
         D = topo.n_procs
 
-        def choose(graph, op_name):
+        def choose(graph, op_name, compute=(0.0, 0.0)):
+            # ``compute=(t_on, t_off)`` makes the ranking overlap-aware:
+            # max(T_comm, T_on) + T_off — zero (the default, and always when
+            # params.Rf is unset) reduces to the serial comm-only model
             if strategy != "auto":
-                return strategy, {}
-            sel = select(graph, params, strategies)
-            return sel.strategy, dict(sel.times)
+                return strategy, {}, {}
+            sel = select(graph, params, strategies, compute=compute)
+            return sel.strategy, dict(sel.times), dict(sel.comm_times)
 
         def make_op(M, strat, row_part, col_part, graph):
             blocks = getattr(M, "blocks", None)
@@ -271,12 +288,30 @@ class DistHierarchy:
                 return p
             return Partition.balanced(lv.A.nrows, topo)
 
+        def onoff_compute(M, row_part, col_part):
+            """Per-device max on/off nnz → modeled (t_on, t_off) split.
+
+            Column locality (not the halo plan) decides on vs off, so the
+            split is strategy-independent and can feed selection *before*
+            any operator is built.
+            """
+            on_max = off_max = 0
+            for q in range(D):
+                rlo, rhi = row_part.local_range(q)
+                clo, chi = col_part.local_range(q)
+                sub = M.submatrix_rows(rlo, rhi)
+                on = int(((sub.indices >= clo) & (sub.indices < chi)).sum())
+                on_max = max(on_max, on)
+                off_max = max(off_max, sub.nnz - on)
+            return spmv_compute_times(params, on_max, off_max)
+
         parts = [part_of(lv) for lv in src_levels]
         levels: list[DistLevel] = []
         for l, lv in enumerate(src_levels):
             part = parts[l]
             gA = rect_vector_graph(lv.A, part, part)
-            sA, tA = choose(gA, "spmv_A")
+            compA = onoff_compute(lv.A, part, part)
+            sA, tA, cA = choose(gA, "spmv_A", compA)
             Aop = make_op(lv.A, sA, part, part, gA)
             # per-level local-kernel layout: ELL gather vs MXU-blocked BCSR
             # (A only — P/R are too rectangular/scattered to block well, and
@@ -297,13 +332,22 @@ class DistHierarchy:
                            modeled={"spmv_A": tA},
                            local_kernel=sel)
             dl.comm_stats["spmv_A"] = schedule_comm_stats(gA, sA)
+            nnz = Aop.onoff_nnz()
+            t_on, t_off = compA
+            t_comm = cA.get(sA, 0.0)
+            dl.onoff = {**nnz, "local_nnz": nnz["on_nnz"] + nnz["off_nnz"],
+                        "halo_empty": Aop.halo_empty,
+                        "t_on": t_on, "t_off": t_off, "t_comm": t_comm,
+                        "eff_modeled": overlap_efficiency(t_comm, t_on, t_off)}
             if lv.P is not None and l + 1 < len(src_levels):
                 cpart = parts[l + 1]
                 gP = rect_vector_graph(lv.P, part, cpart)
-                sP, tP = choose(gP, "interp")
+                sP, tP, _ = choose(gP, "interp",
+                                   onoff_compute(lv.P, part, cpart))
                 dl.P = make_op(lv.P, sP, part, cpart, gP)
                 gR = rect_vector_graph(lv.R, cpart, part)
-                sR, tR = choose(gR, "restrict")
+                sR, tR, _ = choose(gR, "restrict",
+                                   onoff_compute(lv.R, cpart, part))
                 dl.R = make_op(lv.R, sR, cpart, part, gR)
                 dl.rho = estimate_rho_DinvA(lv.A)
                 dl.strategies.update(interp=sP, restrict=sR)
@@ -369,6 +413,7 @@ class DistHierarchy:
         rows = []
         for l, dl in enumerate(self.levels):
             sel = dl.local_kernel
+            oo = dl.onoff
             rows.append({
                 "level": l,
                 "kernel": dl.A.local_kernel,
@@ -378,6 +423,10 @@ class DistHierarchy:
                 "bcsr_fill": sel.get("bcsr_fill", 0.0),
                 "ell_cost": sel.get("ell_cost", 0.0),
                 "bcsr_cost": sel.get("bcsr_cost", float("inf")),
+                "on_nnz": oo.get("on_nnz", 0),
+                "off_nnz": oo.get("off_nnz", 0),
+                "halo_empty": oo.get("halo_empty", False),
+                "overlap_eff_modeled": oo.get("eff_modeled", 0.0),
             })
         return rows
 
@@ -402,7 +451,7 @@ class DistHierarchy:
 
     def _spmv(self, op: DistOperator, arrs: dict, x):
         return op.apply(arrs, x, use_kernel=self.use_kernel,
-                        interpret=self.interpret)
+                        interpret=self.interpret, overlap=self.overlap)
 
     def _pdot(self, a, b):
         part = jnp.sum(a * b)
@@ -541,7 +590,7 @@ class DistHierarchy:
         """
         key = (opts.cycle, opts.smoother, opts.presweeps, opts.postsweeps,
                opts.omega, opts.cheby_degree, self._smoother_arrs_key(opts),
-               self.native_spmm)
+               self.native_spmm, self.overlap)
         if key in self._programs:
             return self._programs[key]
         run_arrs = self.run_arrays(opts)
@@ -685,7 +734,7 @@ class DistHierarchy:
 _BUILD_DEFAULTS = dict(params=TPU_V5E, strategy="auto",
                        strategies=SOLVE_STRATEGIES, dtype=jnp.float32,
                        mesh=None, use_kernel=None, interpret=None,
-                       reduce_strategy="nap3")
+                       reduce_strategy="nap3", overlap=True)
 DIST_CACHE_SIZE = 8
 
 

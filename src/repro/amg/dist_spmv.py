@@ -57,6 +57,36 @@ def _ell_block(M: CSR, row_part: Partition, col_part: Partition, d: int,
     return cols, vals
 
 
+def _split_ell_stacked(cols: np.ndarray, vals: np.ndarray, x_local: int):
+    """Split fused [D, rows, K] ELL arrays into the on-process part (columns
+    < ``x_local``, kept as local ids) and the off-process part (halo columns,
+    rebased to index the halo buffer directly).
+
+    Within each row the relative nonzero order is preserved, so
+    ``A_on·x + A_off·halo`` partitions the fused contraction term-for-term —
+    the property the split-parity suite asserts exactly.
+    """
+    D, R, K = cols.shape
+
+    def pack(mask, offset):
+        m2 = mask.reshape(D * R, K)
+        width = int(m2.sum(axis=1).max(initial=0)) or 1
+        oc = np.full((D * R, width), -1, dtype=np.int32)
+        ov = np.zeros((D * R, width), dtype=vals.dtype)
+        rows, _ = np.nonzero(m2)
+        if rows.size:
+            counts = m2.sum(axis=1)
+            starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            slot = np.arange(rows.size) - np.repeat(starts, counts)
+            oc[rows, slot] = cols.reshape(D * R, K)[m2] - offset
+            ov[rows, slot] = vals.reshape(D * R, K)[m2]
+        return oc.reshape(D, R, width), ov.reshape(D, R, width)
+
+    on = pack((cols >= 0) & (cols < x_local), 0)
+    off = pack(cols >= x_local, x_local)
+    return on, off
+
+
 @dataclasses.dataclass
 class DistOperator:
     """Host-side container for one distributed (possibly rectangular) operator.
@@ -76,10 +106,19 @@ class DistOperator:
     send_idx: np.ndarray         # per-device slices of the plan arrays
     recv_sel: np.ndarray
     pool_sel: np.ndarray         # zeros placeholder when plan.pool_sel is None
+    # on/off split of the same block: A_on holds the halo-free columns (local
+    # ids), A_off the halo columns rebased to halo-buffer ids.  The fused
+    # arrays above stay authoritative for the serial parity oracle.
+    on_cols: np.ndarray | None = None    # [D, rows_local, K_on] int32, -1 pad
+    on_vals: np.ndarray | None = None
+    off_cols: np.ndarray | None = None   # [D, rows_local, K_off] into halo
+    off_vals: np.ndarray | None = None
     # optional BCSR lowering (see lower_bcsr): dense bs×bs blocks feeding the
     # MXU block-contraction kernel instead of the VPU gather
     bcsr_bcols: np.ndarray | None = None   # [D, mb, Kb] int32, -1 pad
     bcsr_bvals: np.ndarray | None = None   # [D, mb, Kb, bs, bs]
+    bcsr_on_bcols: np.ndarray | None = None  # on-part lowering (A_off stays ELL)
+    bcsr_on_bvals: np.ndarray | None = None
     block_size: int = 0                    # 0 = ELL layout
 
     @property
@@ -87,18 +126,37 @@ class DistOperator:
         return self.plan.n_devices
 
     @property
+    def halo_empty(self) -> bool:
+        """True when the plan moves zero entries (halo_len is floored to 1
+        for static shapes, so emptiness must be read from total_halo)."""
+        return self.plan.total_halo == 0
+
+    @property
     def local_kernel(self) -> str:
         """Layout label for reporting: 'bcsr' once lowered, else 'ell'."""
         return "bcsr" if self.bcsr_bcols is not None else "ell"
+
+    def onoff_nnz(self) -> dict[str, int]:
+        """Total and per-device-max nnz of the on/off split (for the
+        overlap-aware cost model and reporting)."""
+        on = (self.on_cols >= 0).sum(axis=(1, 2))
+        off = (self.off_cols >= 0).sum(axis=(1, 2))
+        return {"on_nnz": int(on.sum()), "off_nnz": int(off.sum()),
+                "max_on_nnz": int(on.max(initial=0)),
+                "max_off_nnz": int(off.max(initial=0))}
 
     def device_arrays(self) -> dict[str, np.ndarray]:
         """The sharded inputs the shard_map body needs for one matvec."""
         arrs = {"cols": self.ell_cols, "vals": self.ell_vals,
                 "send": self.send_idx, "recv": self.recv_sel,
-                "psel": self.pool_sel}
+                "psel": self.pool_sel,
+                "on_cols": self.on_cols, "on_vals": self.on_vals,
+                "off_cols": self.off_cols, "off_vals": self.off_vals}
         if self.bcsr_bcols is not None:
             arrs["bcols"] = self.bcsr_bcols
             arrs["bvals"] = self.bcsr_bvals
+            arrs["on_bcols"] = self.bcsr_on_bcols
+            arrs["on_bvals"] = self.bcsr_on_bvals
         return arrs
 
     def lower_bcsr(self, block_size: int) -> None:
@@ -112,43 +170,102 @@ class DistOperator:
         """
         from .csr import CSR, csr_to_bcsr
         D = self.n_devices
+
+        def lower(ell_cols, ell_vals, width):
+            per = []
+            for d in range(D):
+                cols = ell_cols[d]
+                keep = cols >= 0
+                r = np.broadcast_to(
+                    np.arange(self.rows_local, dtype=np.int64)[:, None],
+                    cols.shape)[keep]
+                per.append(csr_to_bcsr(
+                    CSR.from_coo(r, cols[keep], ell_vals[d][keep],
+                                 (self.rows_local, width)), block_size))
+            mb = per[0].bcols.shape[0] if per else 0
+            Kb = max((b.bcols.shape[1] for b in per), default=0)
+            bcols = np.full((D, mb, Kb), -1, dtype=np.int32)
+            bvals = np.zeros((D, mb, Kb, block_size, block_size),
+                             dtype=ell_vals.dtype)
+            for d, b in enumerate(per):
+                kb = b.bcols.shape[1]
+                bcols[d, :, :kb] = b.bcols
+                bvals[d, :, :kb] = b.bvals
+            return bcols, bvals
+
         xfull_len = self.plan.local_n + self.plan.halo_len
-        per = []
-        for d in range(D):
-            cols = self.ell_cols[d]
-            keep = cols >= 0
-            r = np.broadcast_to(
-                np.arange(self.rows_local, dtype=np.int64)[:, None],
-                cols.shape)[keep]
-            per.append(csr_to_bcsr(
-                CSR.from_coo(r, cols[keep], self.ell_vals[d][keep],
-                             (self.rows_local, xfull_len)), block_size))
-        mb = per[0].bcols.shape[0] if per else 0
-        Kb = max((b.bcols.shape[1] for b in per), default=0)
-        bcols = np.full((D, mb, Kb), -1, dtype=np.int32)
-        bvals = np.zeros((D, mb, Kb, block_size, block_size),
-                         dtype=self.ell_vals.dtype)
-        for d, b in enumerate(per):
-            kb = b.bcols.shape[1]
-            bcols[d, :, :kb] = b.bcols
-            bvals[d, :, :kb] = b.bvals
-        self.bcsr_bcols, self.bcsr_bvals = bcols, bvals
+        self.bcsr_bcols, self.bcsr_bvals = lower(
+            self.ell_cols, self.ell_vals, xfull_len)
+        # on-part only: the off-part stays ELL — its rows are halo-width
+        # gathers that would shred into mostly-empty bs×bs blocks.
+        self.bcsr_on_bcols, self.bcsr_on_bvals = lower(
+            self.on_cols, self.on_vals, self.plan.local_n)
         self.block_size = int(block_size)
 
+    @staticmethod
+    def _ell_product(cols, vals, src, use_kernel, interpret):
+        """ELL contraction of one split part against ``src`` ([n(,k)])."""
+        multi = src.ndim == 2
+        if use_kernel:
+            from ..kernels.spmv.spmv import ell_spmm, ell_spmv
+            if multi:
+                return ell_spmm(cols, vals, src, interpret=interpret)
+            return ell_spmv(cols, vals, src, interpret=interpret)
+        safe = jnp.maximum(cols, 0)
+        if multi:
+            contrib = jnp.where((cols >= 0)[..., None],
+                                vals[..., None] * src[safe], 0.0)
+        else:
+            contrib = jnp.where(cols >= 0, vals * src[safe], 0.0)
+        return contrib.sum(axis=1)
+
+    def _on_product(self, arrs, x_loc, use_kernel, interpret):
+        """``A_on · x`` — the halo-free product that overlaps the exchange."""
+        if "on_bcols" in arrs:
+            bcols, bvals = arrs["on_bcols"], arrs["on_bvals"]
+            if use_kernel:
+                from ..kernels.spmv.bcsr import bcsr_spmm, bcsr_spmv
+                fn = bcsr_spmm if x_loc.ndim == 2 else bcsr_spmv
+                y = fn(bcols, bvals, x_loc, interpret=interpret)
+            else:
+                from ..kernels.spmv.bcsr import bcsr_apply_ref
+                y = bcsr_apply_ref(bcols, bvals, x_loc)
+            return y[: self.rows_local]
+        return self._ell_product(arrs["on_cols"], arrs["on_vals"], x_loc,
+                                 use_kernel, interpret)
+
     def apply(self, arrs: dict[str, jnp.ndarray], x_loc: jnp.ndarray,
-              use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+              use_kernel: bool = False, interpret: bool = True,
+              overlap: bool = True) -> jnp.ndarray:
         """Inside shard_map: halo exchange + local SpMV/SpMM for this device.
 
         ``arrs`` holds this device's slices of :meth:`device_arrays` (leading
         device dim already squeezed).  ``x_loc`` may be ``[local]`` (one RHS)
         or ``[local, k]`` (multi-RHS): the halo is exchanged once with the
-        RHS axis riding along and the concatenated ``[local | halo]`` source
-        is indexed inside the local kernel — the fused SpMM never
-        materializes a per-column halo.  Routing: BCSR block contraction when
-        this operator was :meth:`lower_bcsr`'d, else the ELL kernel
+        RHS axis riding along.  Routing: BCSR block contraction when this
+        operator was :meth:`lower_bcsr`'d, else the ELL kernel
         (``use_kernel``) or the inline gather form.
+
+        ``overlap=True`` (default) traces the exchange *before* the
+        independent ``y_on = A_on·x`` product so XLA's async collectives can
+        hide the NAP message latency behind the on-process SpMV; the
+        ``A_off·halo`` correction lands after.  ``overlap=False`` keeps the
+        original fused serial form (``halo_exchange → A·[x|halo]``) as the
+        parity oracle.  Levels whose plan moves zero entries emit no
+        collective at all in either mode.
         """
+        if self.halo_empty:
+            return self._on_product(arrs, x_loc, use_kernel, interpret)
         psel = None if self.plan.pool_sel is None else arrs["psel"]
+        if overlap:
+            # issue the exchange first: `halo` is not consumed until the
+            # off-process correction, so the collective and the on-process
+            # product are dataflow-independent and free to overlap.
+            halo = halo_exchange(x_loc, self.plan, arrs["send"],
+                                 arrs["recv"], psel)
+            y = self._on_product(arrs, x_loc, use_kernel, interpret)
+            return y + self._ell_product(arrs["off_cols"], arrs["off_vals"],
+                                         halo, use_kernel, interpret)
         halo = halo_exchange(x_loc, self.plan, arrs["send"], arrs["recv"], psel)
         xfull = jnp.concatenate([x_loc, halo])    # one buffer for all RHS
         multi = x_loc.ndim == 2
@@ -162,19 +279,8 @@ class DistOperator:
                 from ..kernels.spmv.bcsr import bcsr_apply_ref
                 y = bcsr_apply_ref(bcols, bvals, xfull)
             return y[: self.rows_local]
-        cols, vals = arrs["cols"], arrs["vals"]
-        if use_kernel:
-            from ..kernels.spmv.spmv import ell_spmm, ell_spmv
-            if multi:
-                return ell_spmm(cols, vals, xfull, interpret=interpret)
-            return ell_spmv(cols, vals, xfull, interpret=interpret)
-        safe = jnp.maximum(cols, 0)
-        if multi:
-            contrib = jnp.where((cols >= 0)[..., None],
-                                vals[..., None] * xfull[safe], 0.0)
-        else:
-            contrib = jnp.where(cols >= 0, vals * xfull[safe], 0.0)
-        return contrib.sum(axis=1)
+        return self._ell_product(arrs["cols"], arrs["vals"], xfull,
+                                 use_kernel, interpret)
 
     # ------------------------------------------------------- host-side layout
     def scatter_x(self, x: np.ndarray, dtype=None) -> np.ndarray:
@@ -245,11 +351,15 @@ def _assemble_operator(block_of, K: int, n_pods: int, lanes: int,
                                       need_sorted[d], rows_local, x_local, K)
     psel = plan.pool_sel if plan.pool_sel is not None else np.zeros(
         (D, 1), dtype=np.int32)
+    vals = vals.astype(dtype)
+    (on_cols, on_vals), (off_cols, off_vals) = _split_ell_stacked(
+        cols, vals, x_local)
     return DistOperator(strategy=strategy, plan=plan, row_part=row_part,
                         col_part=col_part, rows_local=rows_local,
-                        ell_cols=cols, ell_vals=vals.astype(dtype),
+                        ell_cols=cols, ell_vals=vals,
                         send_idx=plan.send_idx, recv_sel=plan.recv_sel,
-                        pool_sel=psel)
+                        pool_sel=psel, on_cols=on_cols, on_vals=on_vals,
+                        off_cols=off_cols, off_vals=off_vals)
 
 
 def build_dist_operator(M: CSR, n_pods: int, lanes: int, strategy: str,

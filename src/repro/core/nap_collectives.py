@@ -261,6 +261,11 @@ class HaloPlan:
     # nap3 only: pre-a2a lane pool selection
     pool_sel: np.ndarray | None = None   # [D, n_pods, K3] into intra-gathered pool
     contrib_len: int = 0
+    # TRUE total halo entries across all devices.  ``halo_len`` is floored
+    # to 1 for static shapes, so emptiness must be read here: a plan with
+    # ``total_halo == 0`` moves nothing and the overlapped apply skips the
+    # exchange (no ppermute/all_to_all emitted at all).
+    total_halo: int = 0
 
     @property
     def n_devices(self) -> int:
@@ -275,6 +280,7 @@ def build_halo_plan(graph: CommGraph, n_pods: int, lanes: int,
     D = n_pods * lanes
     local_n = part.max_local_size
     need_sorted = [np.sort(graph.need[d]).astype(np.int64) for d in range(D)]
+    total_halo = int(sum(n.size for n in need_sorted))
     halo_len = max((n.size for n in need_sorted), default=0) or 1
 
     def local_of(d, gidx):
@@ -304,7 +310,7 @@ def build_halo_plan(graph: CommGraph, n_pods: int, lanes: int,
                 k = int(np.searchsorted(msgs[d][e], g))
                 recv_sel[e, j] = d * K + k
         return HaloPlan(strategy, n_pods, lanes, local_n, halo_len,
-                        send_idx, recv_sel, pool_len)
+                        send_idx, recv_sel, pool_len, total_halo=total_halo)
 
     if strategy == "nap2":
         # per (src d, dst pod m): union of what pod m needs from d
@@ -331,7 +337,7 @@ def build_halo_plan(graph: CommGraph, n_pods: int, lanes: int,
                 k = int(np.searchsorted(msgs[d][m], g))
                 recv_sel[e, j] = (lane_src * n_pods + n_src) * K + k
         return HaloPlan(strategy, n_pods, lanes, local_n, halo_len,
-                        send_idx, recv_sel, pool_len)
+                        send_idx, recv_sel, pool_len, total_halo=total_halo)
 
     if strategy == "nap3":
         # pod-pair unions, split across lanes (balanced NAP-3)
@@ -399,7 +405,8 @@ def build_halo_plan(graph: CommGraph, n_pods: int, lanes: int,
                 recv_sel[e, j] = (l * n_pods + n) * K3 + slot
         return HaloPlan(strategy, n_pods, lanes, local_n, halo_len,
                         send_idx, recv_sel, pool_len,
-                        pool_sel=pool_sel, contrib_len=contrib_len)
+                        pool_sel=pool_sel, contrib_len=contrib_len,
+                        total_halo=total_halo)
 
     raise ValueError(f"unknown strategy {strategy!r}")
 

@@ -48,6 +48,11 @@ class MachineParams:
     intra: tuple[ProtocolParams, ProtocolParams, ProtocolParams]
     intra_socket: tuple[ProtocolParams, ProtocolParams, ProtocolParams]
     RN: float     # bytes / second a NID injects into the network
+    # sustained local SpMV flop rate per process (flop/s).  0 means "not
+    # measured": overlap-aware phase costs degrade to the pure comm time, so
+    # every documented machine above stays selection-compatible with the
+    # pre-overlap models.
+    Rf: float = 0.0
 
     def proto(self, nbytes: float) -> int:
         if nbytes < self.short_cutoff:
@@ -61,6 +66,46 @@ class MachineParams:
 
     def p_intra(self, nbytes: float) -> ProtocolParams:
         return self.intra[self.proto(nbytes)]
+
+    @classmethod
+    def from_measurements(cls, name: str, ppn: int, *,
+                          inter: list[tuple[float, float]],
+                          intra: list[tuple[float, float]],
+                          intra_socket: list[tuple[float, float]] | None = None,
+                          Rf: float = 0.0, RN: float | None = None,
+                          short_cutoff: float = 4096,
+                          eager_cutoff: float = 131072) -> "MachineParams":
+        """Calibrate a parameter set from measured ``(bytes, seconds)``
+        ping-pong samples (ROADMAP "measured machine models", first slice).
+
+        Each tier's samples are fit to the postal model t = α + n/R_b by
+        linear least squares; one fitted :class:`ProtocolParams` fills all
+        three protocol slots (XLA collectives have no MPI-style protocol
+        switch — the cutoffs are kept only so :meth:`proto` stays total).
+        ``RN`` defaults to the whole node injecting at once (ppn × the
+        fitted inter R_b); ``Rf`` is the measured local SpMV flop rate.
+        """
+        def fit(samples) -> ProtocolParams:
+            s = np.asarray(samples, dtype=np.float64)
+            if s.ndim != 2 or s.shape[0] < 2:
+                raise ValueError(
+                    f"need >=2 (bytes, seconds) samples per tier, got {s!r}")
+            A = np.stack([np.ones(s.shape[0]), s[:, 0]], axis=1)
+            alpha, inv_rb = np.linalg.lstsq(A, s[:, 1], rcond=None)[0]
+            # floors keep a noisy fit physical: latency never negative,
+            # bandwidth finite and positive
+            return ProtocolParams(alpha=float(max(alpha, 1e-9)),
+                                  Rb=float(1.0 / max(inv_rb, 1e-15)))
+
+        p_inter = fit(inter)
+        p_intra = fit(intra)
+        p_sock = fit(intra_socket) if intra_socket is not None else p_intra
+        return cls(name=name, ppn=ppn, short_cutoff=short_cutoff,
+                   eager_cutoff=eager_cutoff,
+                   inter=(p_inter,) * 3, intra=(p_intra,) * 3,
+                   intra_socket=(p_sock,) * 3,
+                   RN=float(RN) if RN is not None else ppn * p_inter.Rb,
+                   Rf=float(Rf))
 
 
 # --- Blue Waters (Cray XE6, Gemini).  Measured-order-of-magnitude constants:
@@ -142,6 +187,40 @@ TPU_V5E = MachineParams(
 )
 
 MACHINES = {m.name: m for m in (BLUE_WATERS, QUARTZ, TPU_V5E)}
+
+
+def register_machine(params: MachineParams) -> MachineParams:
+    """Make a (typically measured) parameter set addressable by name — e.g.
+    ``AMGConfig(machine=...)`` resolves through :data:`MACHINES`."""
+    MACHINES[params.name] = params
+    return params
+
+
+# ------------------------------------------------------------- overlap costs
+def spmv_compute_times(params: MachineParams, on_nnz: int,
+                       off_nnz: int) -> tuple[float, float]:
+    """(t_on, t_off) seconds for the split local products of one SpMV
+    (2 flops per stored nonzero, worst device).  (0, 0) when the machine has
+    no measured flop rate — overlap-unaware selection."""
+    if params.Rf <= 0:
+        return 0.0, 0.0
+    return 2.0 * on_nnz / params.Rf, 2.0 * off_nnz / params.Rf
+
+
+def overlap_time(t_comm: float, t_on: float, t_off: float) -> float:
+    """Overlap-aware phase cost: the exchange hides behind the on-process
+    product, the off-process product lands after — max(T_comm, T_on) + T_off
+    instead of the serial sum of phases."""
+    return max(t_comm, t_on) + t_off
+
+
+def overlap_efficiency(t_comm: float, t_on: float, t_off: float) -> float:
+    """Fraction of the serial phase cost the overlap hides (0 when the
+    machine is overlap-unaware or the phase is free)."""
+    serial = t_comm + t_on + t_off
+    if serial <= 0.0:
+        return 0.0
+    return 1.0 - overlap_time(t_comm, t_on, t_off) / serial
 
 
 # ------------------------------------------------------------------ Fig. 8/9 helpers

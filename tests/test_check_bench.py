@@ -108,6 +108,66 @@ def test_parse_derived_skips_non_numeric():
     assert "mesh" not in d and "strategy" not in d and "speedup" not in d
 
 
+def test_overlap_level_rows_gate_split_exactness(tmp_path):
+    """dist_overlap_L* rows: on+off must equal local nnz, fields finite."""
+    good = row("dist_overlap_L0",
+               "on_nnz=3872;off_nnz=6776;local_nnz=10648;halo_empty=0;"
+               "eff_modeled=0.0004;strategy=standard")
+    assert run(tmp_path, [good], [good]) == 0
+    # split that does not partition the local block fails
+    bad = [row("dist_overlap_L0",
+               "on_nnz=3872;off_nnz=6776;local_nnz=10000;halo_empty=0;"
+               "eff_modeled=0.0004;strategy=standard")]
+    assert run(tmp_path, [good], bad) == 1
+    # a missing split field fails
+    missing = [row("dist_overlap_L0",
+                   "on_nnz=3872;local_nnz=10648;eff_modeled=0.1")]
+    assert run(tmp_path, [good], missing) == 1
+    # non-finite efficiency fails
+    nan_eff = [row("dist_overlap_L0",
+                   "on_nnz=1;off_nnz=1;local_nnz=2;eff_modeled=nan")]
+    assert run(tmp_path, [good], nan_eff) == 1
+
+
+def test_overlap_cycle_rows_gate_structure_not_magnitude(tmp_path):
+    """dist_overlap_cycle_*: timings finite+positive, speedup recorded;
+    the speedup magnitude itself may move freely."""
+    base = [row("dist_overlap_cycle_V",
+                "serial_us=2879.68;overlap_us=2408.04;speedup=1.196;"
+                "mesh=2x4;n=512")]
+    slower = [row("dist_overlap_cycle_V",
+                  "serial_us=100.0;overlap_us=900.0;speedup=0.111;"
+                  "mesh=2x4;n=512")]
+    assert run(tmp_path, base, slower) == 0     # magnitude ungated
+    no_speedup = [row("dist_overlap_cycle_V",
+                      "serial_us=100.0;overlap_us=90.0;mesh=2x4;n=512")]
+    assert run(tmp_path, base, no_speedup) == 1
+    bad_t = [row("dist_overlap_cycle_V",
+                 "serial_us=inf;overlap_us=90.0;speedup=1.0;mesh=2x4")]
+    assert run(tmp_path, base, bad_t) == 1
+
+
+def test_overlap_rows_required_with_cycle_sweep(tmp_path):
+    """A run with the dist-solve cycle sweep but no overlap rows fails."""
+    cyc = row("dist_cycle_V_jacobi", "iters=7;conv=0.17;inter_msgs=10")
+    ovl = row("dist_overlap_L0",
+              "on_nnz=1;off_nnz=1;local_nnz=2;eff_modeled=0.0")
+    ovc = row("dist_overlap_cycle_V",
+              "serial_us=10.0;overlap_us=9.0;speedup=1.1")
+    assert run(tmp_path, [cyc], [cyc]) == 1              # both missing
+    assert run(tmp_path, [cyc], [cyc, ovl]) == 1         # cycle row missing
+    assert run(tmp_path, [cyc], [cyc, ovl, ovc]) == 0
+
+
+def test_modeled_us_must_be_finite(tmp_path):
+    base = [row("dist_solve_auto_L0_spmv_A",
+                "strategy=nap2;modeled_us=12.3;level=0;op=spmv_A")]
+    assert run(tmp_path, base, base) == 0
+    bad = [row("dist_solve_auto_L0_spmv_A",
+               "strategy=nap2;modeled_us=nan;level=0;op=spmv_A")]
+    assert run(tmp_path, base, bad) == 1
+
+
 def test_committed_baselines_pass_against_themselves():
     root = pathlib.Path(__file__).parents[1]
     for name in ("BENCH_dist_solve.json", "BENCH_dist_setup.json"):

@@ -24,7 +24,8 @@ EXPECTED = [
     "OK solve_nap2", "OK pcg_nap2",
     "OK solve_nap3", "OK pcg_nap3",
     "OK auto_select", "OK pallas_path", "OK chebyshev",
-    "OK cycle_smoother_parity", "OK dist_setup_cycles", "OK multi_rhs",
+    "OK cycle_smoother_parity", "OK overlap_parity", "OK empty_halo",
+    "OK dist_setup_cycles", "OK multi_rhs",
     "ALL_OK",
 ]
 

@@ -1,0 +1,196 @@
+"""On/off-process operator splitting + overlap-aware selection (host side).
+
+Everything here runs on the host or a 1×1 mesh — the split itself is pure
+numpy lowering, and the overlap-aware cost model is arithmetic.  The
+multi-device end-to-end parity (overlap=True vs the serial oracle across
+all 15 cycle×smoother pairs) and the 1-device-per-node empty-halo
+no-collective check run in the 8-device subprocess
+(tests/dist_solve_script.py, "OK overlap_parity" / "OK empty_halo").
+"""
+import numpy as np
+import pytest
+
+from repro.amg.csr import CSR
+from repro.amg.dist_spmv import build_dist_operator
+from repro.core.perf_model import (BLUE_WATERS, MachineParams,
+                                   overlap_efficiency, overlap_time,
+                                   spmv_compute_times)
+from repro.core.selector import select
+from repro.core.topology import Partition, Topology
+from repro.amg.dist import rect_vector_graph
+
+N_PODS, LANES = 2, 4
+
+
+def _random_csr(n=96, seed=0):
+    rng = np.random.default_rng(seed)
+    band = (np.abs(np.subtract.outer(np.arange(n), np.arange(n))) <= 3)
+    dense = band * rng.normal(size=(n, n))
+    dense += np.where(rng.random((n, n)) < 0.08, rng.normal(size=(n, n)), 0.0)
+    r, c = np.nonzero(dense)
+    return CSR.from_coo(r, c, dense[r, c], (n, n)), dense
+
+
+def _ell_entries(cols, vals):
+    """Multiset of (row, col, val) triples of one device's ELL block."""
+    keep = cols >= 0
+    r = np.broadcast_to(np.arange(cols.shape[0])[:, None], cols.shape)[keep]
+    return sorted(zip(r.tolist(), cols[keep].tolist(), vals[keep].tolist()))
+
+
+@pytest.mark.parametrize("strategy", ["standard", "nap2", "nap3"])
+def test_split_partitions_fused_entries_exactly(strategy):
+    """A_on (local ids) + A_off (halo ids, rebased) must hold *exactly* the
+    fused block's entries: on = fused entries with col < x_local, off = the
+    rest shifted by x_local — per device, as multisets."""
+    A, _ = _random_csr()
+    op = build_dist_operator(A, N_PODS, LANES, strategy, dtype=np.float64)
+    x_local = op.plan.local_n
+    for d in range(op.n_devices):
+        fused = _ell_entries(op.ell_cols[d], op.ell_vals[d])
+        want_on = [e for e in fused if e[1] < x_local]
+        want_off = [(r, c - x_local, v) for r, c, v in fused if c >= x_local]
+        assert _ell_entries(op.on_cols[d], op.on_vals[d]) == want_on
+        assert _ell_entries(op.off_cols[d], op.off_vals[d]) == want_off
+
+
+def test_split_numeric_parity_per_device():
+    """A_on·x + A_off·halo == A_local·[x | halo] (host arithmetic, fp64)."""
+    A, dense = _random_csr(seed=3)
+    op = build_dist_operator(A, N_PODS, LANES, "standard", dtype=np.float64)
+    part = op.col_part
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=A.ncols)
+
+    def ell_apply(cols, vals, src):
+        keep = cols >= 0
+        return np.where(keep, vals * src[np.maximum(cols, 0)], 0.0).sum(axis=1)
+
+    graph = rect_vector_graph(A, part, part)
+    for d in range(op.n_devices):
+        lo, hi = part.local_range(d)
+        x_loc = np.zeros(op.plan.local_n)
+        x_loc[: hi - lo] = x[lo:hi]
+        halo = np.zeros(op.plan.halo_len)
+        need = np.sort(graph.need[d])
+        halo[: need.size] = x[need]
+        fused = ell_apply(op.ell_cols[d], op.ell_vals[d],
+                          np.concatenate([x_loc, halo]))
+        split = (ell_apply(op.on_cols[d], op.on_vals[d], x_loc)
+                 + ell_apply(op.off_cols[d], op.off_vals[d], halo))
+        np.testing.assert_allclose(split, fused, rtol=0, atol=1e-13)
+        # and both match the dense row block
+        y = dense[lo:hi] @ x
+        np.testing.assert_allclose(split[: hi - lo], y, rtol=0, atol=1e-12)
+
+
+def test_onoff_nnz_partitions_local_nnz():
+    A, _ = _random_csr(seed=5)
+    op = build_dist_operator(A, N_PODS, LANES, "nap2", dtype=np.float64)
+    stats = op.onoff_nnz()
+    assert stats["on_nnz"] + stats["off_nnz"] == int((op.ell_cols >= 0).sum())
+    assert stats["on_nnz"] + stats["off_nnz"] == A.nnz
+
+
+def test_block_diagonal_operator_has_empty_halo():
+    """A block-diagonal matrix aligned to the partition moves zero halo
+    entries — total_halo records it even though halo_len is floored to 1."""
+    topo = Topology(n_nodes=N_PODS, ppn=LANES)
+    n = 96
+    part = Partition.balanced(n, topo)
+    rng = np.random.default_rng(0)
+    dense = np.zeros((n, n))
+    for d in range(topo.n_procs):
+        lo, hi = part.local_range(d)
+        dense[lo:hi, lo:hi] = rng.normal(size=(hi - lo, hi - lo))
+    r, c = np.nonzero(dense)
+    B = CSR.from_coo(r, c, dense[r, c], (n, n))
+    op = build_dist_operator(B, N_PODS, LANES, "standard", dtype=np.float64)
+    assert op.plan.total_halo == 0
+    assert op.halo_empty
+    assert op.onoff_nnz()["off_nnz"] == 0
+    # a coupled operator is not empty
+    A, _ = _random_csr()
+    op2 = build_dist_operator(A, N_PODS, LANES, "standard", dtype=np.float64)
+    assert op2.plan.total_halo > 0 and not op2.halo_empty
+
+
+def test_empty_halo_apply_emits_no_collective_1x1():
+    """On a 1×1 mesh every operator is halo-free: the jitted apply must
+    contain no ppermute / all_to_all / all_gather at all.  (The 8-device
+    1-device-per-node variant runs in the dist_solve subprocess.)"""
+    jax = pytest.importorskip("jax")
+    from repro.amg.dist_spmv import build_dist_spmv
+    A, dense = _random_csr(seed=11)
+    sp = build_dist_spmv(A, 1, 1, "standard", dtype=np.float64)
+    assert sp.op.halo_empty
+    import jax.numpy as jnp
+    txt = str(jax.make_jaxpr(sp.fn)(jnp.zeros((1, sp.op.plan.local_n))))
+    for prim in ("ppermute", "all_to_all", "all_gather"):
+        assert prim not in txt, prim
+    x = np.random.default_rng(1).normal(size=A.ncols)
+    # fp32 on this in-process run (jax x64 stays off in the main pytest
+    # process); the fp64 parity lives in the subprocess script
+    np.testing.assert_allclose(sp.matvec(x), dense @ x, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ cost model
+
+
+def test_from_measurements_recovers_postal_fit():
+    """lstsq on exact postal-model samples recovers alpha and R_b."""
+    alpha, rb = 2.5e-6, 8.0e8
+    samples = [(n, alpha + n / rb) for n in (1024., 8192., 65536., 524288.)]
+    p = MachineParams.from_measurements(
+        "fit_test", ppn=4, inter=samples, intra=samples, Rf=1e9)
+    got = p.inter[0]
+    assert got.alpha == pytest.approx(alpha, rel=1e-6)
+    assert got.Rb == pytest.approx(rb, rel=1e-6)
+    assert p.Rf == 1e9
+    assert p.RN == pytest.approx(4 * rb, rel=1e-6)
+    # all three protocol slots share the single fitted curve
+    assert p.inter[1] == got and p.inter[2] == got
+
+
+def test_from_measurements_floors_noisy_fit():
+    """A fit driven negative by noise is floored, never unphysical."""
+    samples = [(1024., 5e-6), (2048., 1e-6), (4096., 8e-6)]
+    p = MachineParams.from_measurements("noisy", ppn=2, inter=samples,
+                                        intra=samples)
+    assert p.inter[0].alpha >= 1e-9
+    assert 0 < p.inter[0].Rb < float("inf")
+    with pytest.raises(ValueError):
+        MachineParams.from_measurements("bad", ppn=2, inter=[(1., 1.)],
+                                        intra=samples)
+
+
+def test_overlap_time_and_efficiency():
+    assert overlap_time(10.0, 4.0, 1.0) == 11.0      # comm dominates
+    assert overlap_time(3.0, 4.0, 1.0) == 5.0        # compute hides comm
+    assert overlap_efficiency(0.0, 0.0, 0.0) == 0.0
+    # fully hidden exchange: serial 3+3+0=6, overlapped max(3,3)+0=3
+    assert overlap_efficiency(3.0, 3.0, 0.0) == pytest.approx(0.5)
+    # overlap-unaware machines yield zero compute → zero efficiency
+    assert spmv_compute_times(BLUE_WATERS, 10**6, 10**6) == (0.0, 0.0)
+
+
+def test_selection_accounts_for_hidden_latency():
+    """With a compute split supplied, select() ranks strategies by
+    max(T_comm, T_on) + T_off; a large t_on can erase the comm differences
+    so the cheapest-comm strategy no longer wins automatically."""
+    A, _ = _random_csr(seed=13)
+    topo = Topology(n_nodes=N_PODS, ppn=LANES)
+    part = Partition.balanced(A.nrows, topo)
+    g = rect_vector_graph(A, part, part)
+    base = select(g, BLUE_WATERS)
+    assert base.compute == (0.0, 0.0)
+    assert base.times == base.comm_times           # serial reduction
+    t_on = 10.0 * max(base.comm_times.values())    # compute dwarfs comm
+    sel = select(g, BLUE_WATERS, compute=(t_on, 0.0))
+    assert sel.compute == (t_on, 0.0)
+    for s, t in sel.times.items():
+        assert t == pytest.approx(
+            overlap_time(sel.comm_times[s], t_on, 0.0))
+        assert t == pytest.approx(t_on)            # everything fully hidden
+    # comm_times preserve the raw exchange model for reporting
+    assert sel.comm_times == base.comm_times
