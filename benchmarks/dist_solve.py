@@ -5,7 +5,9 @@ smoother sweep with per-cycle coarse-level message counts
 (``cycle_smoother_rows`` — the rows the CI regression gate vets), a
 weak-scaling sweep over ≥3 problem sizes (``weak_rows``) and a
 cached-vs-cold ``AMGSolver`` session comparison (``session_rows``) showing
-the per-call rebuild cost the session API eliminates.
+the per-call rebuild cost the session API eliminates.  A streaming drift
+sweep (``streaming_rows``) pits value-only refreshes against the adaptive
+full re-setup that one injected convergence regression triggers.
 
 Emits the ``name,us_per_call,derived`` rows used by :mod:`benchmarks.run`,
 and — when run standalone — a ``BENCH_dist_solve.json`` file with the same
@@ -267,6 +269,96 @@ def session_rows(smoke: bool | None = None):
              derived + f";speedup={cold / max(cached, 1e-12):.1f}x")]
 
 
+def streaming_rows(smoke: bool | None = None):
+    """Drift sweep through ONE streaming session: A₀ is solved once (the
+    session-cache hit), then a sequence of value-only drifts flows through
+    :meth:`AMGService.update` — each refresh replays the Galerkin products
+    on the frozen NAP schedules and reuses the compiled fused programs —
+    and the final step injects a convergence regression so the adaptive
+    full re-setup path is exercised (and timed) deterministically.
+
+    ``streaming_refresh`` records the mean value-only refresh wall clock
+    and ``streaming_resetup`` the escalated re-setup wall clock; both carry
+    the session counters (``solves == refreshes + resetups + cached``),
+    the per-step iteration trajectory and the trigger tallies that
+    scripts/check_bench.py gates structurally (refresh must be cheaper
+    than re-setup; iteration counts must stay finite)."""
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+    import numpy as np
+
+    from repro.amg.api import AMGConfig, AMGService, clear_sessions
+    from repro.amg.csr import CSR
+    from repro.amg.problems import laplace_3d
+
+    n = 8 if smoke else 12
+    steps = 4 if smoke else 8
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    A = laplace_3d(n)
+    b = A.matvec(np.ones(A.nrows))
+    cfg = AMGConfig(backend="dist", n_pods=n_pods, lanes=lanes,
+                    machine="blue_waters", tol=1e-6, maxiter=60)
+    clear_sessions()
+    svc = AMGService(cfg)
+    svc.register("m", A)
+    rng = np.random.default_rng(7)
+
+    def drifted(M, scale=0.02):
+        # value-only drift on the frozen pattern, resymmetrized so pcg's
+        # SPD assumption survives the perturbation
+        data = M.data * (1.0 + scale * rng.random(M.nnz))
+        Mt = CSR(M.shape, M.indptr.copy(), M.indices.copy(), data).T
+        return CSR(M.shape, M.indptr.copy(), M.indices.copy(),
+                   0.5 * (data + Mt.data))
+
+    def solve_once() -> int:
+        t = svc.submit("m", b, method="pcg")
+        svc.drain()
+        t.result()
+        return int(t.diagnostics["iterations"])
+
+    iters = [solve_once()]      # baseline solve: no update preceded it
+    refresh_us: list[float] = []
+    resetup_us: list[float] = []
+    for step in range(steps):
+        A = drifted(A)
+        if step == steps - 1:
+            # inject a convergence regression: the next update must
+            # escalate to a full node-aware re-setup, not a refresh
+            bound = svc.bound_for("m")
+            bound.last_iterations = 10 * (bound.baseline_iterations or 1) + 100
+        t0 = time.perf_counter()
+        out = svc.update("m", A)
+        # a refresh re-lowers values in-band; a re-setup defers the
+        # DistHierarchy lowering to first use — materialize it so both
+        # actions are charged their full pre-solve cost
+        svc.bound_for("m").dist_hierarchy
+        dt = (time.perf_counter() - t0) * 1e6
+        (refresh_us if out["action"] == "refresh" else resetup_us).append(dt)
+        iters.append(solve_once())
+    st = svc.store.stats()
+    assert st["refreshes"] == steps - 1 and st["resetups"] == 1, st
+    assert all(np.isfinite(i) and 0 <= i <= cfg.maxiter for i in iters), iters
+    solves = len(iters)
+    cached = solves - st["refreshes"] - st["resetups"]
+    mean_refresh = sum(refresh_us) / len(refresh_us)
+    triggers = ",".join(f"{k}:{v}" for k, v in sorted(st["triggers"].items()))
+    counters = (f"solves={solves};refreshes={st['refreshes']};"
+                f"resetups={st['resetups']};cached={cached};"
+                f"max_iters={max(iters)};iters={':'.join(map(str, iters))};"
+                f"triggers={triggers}")
+    timing = (f"refresh_us={mean_refresh:.2f};resetup_us={resetup_us[0]:.2f};"
+              f"speedup={resetup_us[0] / max(mean_refresh, 1e-9):.2f}")
+    shape = f"n={A.nrows};mesh={n_pods}x{lanes};steps={steps}"
+    clear_sessions()
+    return [
+        ("streaming_refresh", mean_refresh, f"{shape};{counters};{timing}"),
+        ("streaming_resetup", resetup_us[0],
+         f"{shape};{counters};{timing};trigger=regression(injected)"),
+    ]
+
+
 def serving_rows(smoke: bool | None = None):
     """Serving throughput through :class:`~repro.amg.api.AMGService`:
     solves/s cold (setup + lowering + compile in-band), hot (session-store
@@ -367,6 +459,7 @@ def main(argv=None) -> None:
     data = (rows(smoke=args.smoke) + cycle_smoother_rows(smoke=args.smoke)
             + overlap_rows(smoke=args.smoke)
             + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke)
+            + streaming_rows(smoke=args.smoke)
             + serving_rows(smoke=args.smoke)
             + serving_latency_rows(smoke=args.smoke))
     print("name,us_per_call,derived")

@@ -23,6 +23,7 @@ MODULES = [
     ("dist_solve_overlap", lambda: dist_solve.overlap_rows(smoke=True)),
     ("dist_solve_weak", lambda: dist_solve.weak_rows(smoke=True)),
     ("dist_solve_session", lambda: dist_solve.session_rows(smoke=True)),
+    ("dist_solve_streaming", lambda: dist_solve.streaming_rows(smoke=True)),
     ("dist_solve_serving", lambda: dist_solve.serving_rows(smoke=True)),
     ("dist_setup", lambda: dist_setup.rows(smoke=True)),
     ("kernels", lambda: kernels.rows(smoke=True)),

@@ -18,6 +18,12 @@ response, which ``--check`` treats as fatal.  Latency is measured from
 socket send to the client reader thread seeing the response (harvesting
 later does not inflate it).
 
+After the load drains, a **streaming epilogue** (:func:`update_round`)
+sends one ΔA ``update`` frame per (tenant, matrix) into the sessions the
+load left warm — exercising the schema-v2 value-refresh path over real
+sockets — and verifies each with a solve that must track the drifted
+operator; ``--check`` fails on any update error or stale residual.
+
 Emits ``serving_latency_{tenant}_{class}`` rows (p50/p99/p999 ms,
 solves/s, reject rate, accounting) that ``benchmarks/dist_solve.py``
 folds into ``BENCH_dist_solve.json`` and ``scripts/check_bench.py``
@@ -115,6 +121,60 @@ def run_load(host: str, port: int, problems, plan, connections: int,
         for c in clients:
             c.close()
     return results, max(t_last - t0, 1e-9), server_stats
+
+
+def update_round(host: str, port: int, problems, tenants, *,
+                 method: str = "pcg", seed: int = 1):
+    """Streaming epilogue to the load: one ΔA ``update`` frame per
+    (tenant, matrix) against the sessions the load left warm, each followed
+    by a verification solve that must land on the drifted operator.
+    Tenants drift independently (each holds its own registered copy of the
+    matrix), so validation tracks a per-tenant view of ``problems`` and the
+    caller's dict is never mutated.  Returns accounting for ``--check``:
+    every update must come back ``updated`` with a refresh or re-setup
+    action and every verification residual must track the new values."""
+    import numpy as np
+
+    from repro.serve.workload import make_request, make_update, rel_residual
+
+    acct = {"updates": 0, "refresh": 0, "resetup": 0, "failures": []}
+    client = connect_clients(host, port, 1)[0]
+    try:
+        for tenant in tenants:
+            rng = np.random.default_rng(seed)
+            live = dict(problems)          # this tenant's drifted view
+            for mid in sorted(live):
+                payload = make_update(rng, live, mid)
+                try:
+                    frame = client.update(tenant, payload)
+                except Exception as exc:
+                    acct["failures"].append(
+                        f"{tenant}/{mid[:12]}: update frame failed: {exc}")
+                    continue
+                acct["updates"] += 1
+                action = frame.get("action")
+                if action in ("refresh", "resetup"):
+                    acct[action] += 1
+                else:
+                    acct["failures"].append(
+                        f"{tenant}/{mid[:12]}: unexpected update action "
+                        f"{action!r} in {frame}")
+                b, spay = make_request(rng, live, mid, method=method)
+                try:
+                    x, _diag = client.solve(tenant, spay)
+                except Exception as exc:
+                    acct["failures"].append(
+                        f"{tenant}/{mid[:12]}: post-update solve failed: "
+                        f"{exc}")
+                    continue
+                rel = rel_residual(live[mid], x, b)
+                if not (np.isfinite(rel) and rel < 1e-4):
+                    acct["failures"].append(
+                        f"{tenant}/{mid[:12]}: post-update residual "
+                        f"{rel:.3e} does not track the drifted operator")
+    finally:
+        client.close()
+    return acct
 
 
 def aggregate(results, problems, validate: bool = True):
@@ -311,6 +371,12 @@ def main(argv=None) -> int:
     try:
         results, makespan, server_stats = run_load(
             host, port, problems, plan, connections=args.connections)
+        # streaming epilogue: ΔA update frames against the warm sessions,
+        # each verified by a solve on the drifted operator (never mutates
+        # ``problems`` — the main load's validation below stays exact)
+        upd = update_round(host, port, problems,
+                           [t for t, _ in tenant_specs],
+                           method=args.method, seed=args.seed + 1)
     finally:
         if srv_cm is not None:
             srv_cm.__exit__(None, None, None)
@@ -323,6 +389,9 @@ def main(argv=None) -> int:
           f"{args.connections} connections at {rate:.0f}/s target: "
           f"{total} completed ({total / makespan:.1f} solves/s), "
           f"{rejected} rejected, makespan {makespan:.2f}s")
+    print(f"[serve_load] streaming epilogue: {upd['updates']} update "
+          f"frames ({upd['refresh']} refresh, {upd['resetup']} resetup), "
+          f"{len(upd['failures'])} failures")
     print_table(classes, makespan)
     if args.out:
         with open(args.out, "w") as f:
@@ -333,6 +402,9 @@ def main(argv=None) -> int:
         print(f"# wrote {args.out}")
 
     failures = []
+    failures.extend(upd["failures"])
+    if upd["updates"] == 0:
+        failures.append("streaming epilogue sent no update frames")
     if unstructured:
         failures.append(f"{len(unstructured)} unstructured responses: "
                         f"{unstructured[:3]}")

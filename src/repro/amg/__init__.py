@@ -29,14 +29,22 @@ an SPD preconditioner on every backend.
 admission (``submit() -> Ticket``; ``ticket.result()`` blocks), a
 coalescing window that stacks same-(matrix, knobs) right-hand sides from
 *separate submission bursts* into one multi-RHS device trace, per-request
-``tol``/``maxiter``/``x0``, priority classes with starvation-free aging,
-and a versioned wire codec (matrices registered by content fingerprint,
-requests as schema-tagged payloads) so the whole service can be driven
-over a byte transport — ``repro.launch.serve --solver amg --wire``.
-Sessions live in an instantiable :class:`~repro.amg.api.SessionStore`
-with pluggable LRU / TTL / cost-aware bytes-budget eviction and
-hit/evict/setup-cost accounting; the old synchronous
-:class:`~repro.amg.api.SolverEngine` survives as a deprecation shim.
+:class:`~repro.amg.api.RequestOptions`, priority classes with
+starvation-free aging, and a versioned wire codec (matrices registered by
+content fingerprint, requests as schema-tagged payloads) so the whole
+service can be driven over a byte transport — ``repro.launch.serve
+--solver amg --wire``.  Sessions live in an instantiable
+:class:`~repro.amg.api.SessionStore` with pluggable LRU / TTL /
+cost-aware bytes-budget eviction and hit/evict/setup-cost accounting.
+
+**Streaming sessions**: matrices that drift in value but keep their
+sparsity pattern (time-stepping, Newton linearizations) go through
+``bound.update(A_new)`` / ``AMGService.update`` — a value-only refresh
+that re-runs the Galerkin products numerically onto the frozen level
+patterns, reusing every selected NAP schedule, halo plan and compiled
+program, and escalates to a full node-aware re-setup when the
+:class:`~repro.amg.api.RefreshPolicy` detects convergence regression or
+the pattern changes.
 
 ``AMGConfig(setup_backend="dist", backend="dist")`` additionally runs the
 **setup phase** partitioned (:mod:`repro.amg.dist_setup`): the Galerkin
@@ -52,8 +60,9 @@ dict, now cached per hierarchy).  ``DistHierarchy`` is exported lazily so
 numpy-only users never import JAX.
 """
 from .api import (AMGConfig, AMGService, AMGSolver, BoundSolver,
-                  ServiceReport, SessionStore, SolveRequest, SolverEngine,
-                  Ticket, available_backends, register_backend)
+                  PatternMismatch, RefreshPolicy, RequestOptions,
+                  ServiceReport, SessionStore, Ticket, available_backends,
+                  register_backend)
 from .csr import CSR
 from .hierarchy import Hierarchy, Level, setup
 from .solve import (MultiSolveResult, SolveOptions, SolveResult, pcg, solve,
@@ -61,8 +70,9 @@ from .solve import (MultiSolveResult, SolveOptions, SolveResult, pcg, solve,
 
 __all__ = ["CSR", "Hierarchy", "Level", "setup", "SolveOptions", "SolveResult",
            "MultiSolveResult", "pcg", "solve", "vcycle", "AMGConfig",
-           "AMGService", "AMGSolver", "BoundSolver", "ServiceReport",
-           "SessionStore", "SolverEngine", "SolveRequest", "Ticket",
+           "AMGService", "AMGSolver", "BoundSolver", "PatternMismatch",
+           "RefreshPolicy", "RequestOptions", "ServiceReport",
+           "SessionStore", "Ticket",
            "available_backends", "register_backend", "DistHierarchy"]
 
 # NOTE: the distributed setup entrypoint is deliberately NOT re-exported

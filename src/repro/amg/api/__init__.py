@@ -12,8 +12,9 @@ layered bottom-up:
 
 * :mod:`~repro.amg.api.config` — frozen, hashable :class:`AMGConfig` plus
   the **versioned wire codec**: schema-tagged, unknown-key-rejecting
-  payloads for configs, CSR matrices (registered by content fingerprint)
-  and solve requests, so the service can be driven over a byte transport.
+  payloads for configs, CSR matrices (registered by content fingerprint),
+  solve requests and streaming ``A + ΔA`` update requests, so the service
+  can be driven over a byte transport.
 * :mod:`~repro.amg.api.registry` — :func:`register_backend`; ``"host"``
   (numpy reference) and ``"dist"`` (device-resident fused cycle) ship here
   and future backends plug in without touching call sites.
@@ -23,16 +24,17 @@ layered bottom-up:
   :class:`BytesBudgetPolicy`) and per-entry setup-cost / hit accounting.
 * :mod:`~repro.amg.api.service` — :class:`AMGService`, the serving
   surface: ticketed async admission (``submit() -> Ticket``), cross-burst
-  multi-RHS coalescing windows, per-request ``tol``/``maxiter``/``x0``,
-  priority classes with starvation-free aging, and a
+  multi-RHS coalescing windows, per-request :class:`RequestOptions`,
+  priority classes with starvation-free aging, streaming
+  :meth:`~AMGService.update` routing under stable matrix ids, and a
   :class:`ServiceReport` of per-request diagnostics + store counters.
-  :class:`SolverEngine` survives as a deprecation shim over it.
 
 Surface::
 
     cfg = AMGConfig(solver="rs", backend="dist", n_pods=2, lanes=4)
     bound = AMGSolver(cfg).setup(A)      # cached per (matrix, config)
     res = bound.solve(b)                 # b: [n] or [n, k] (multi-RHS)
+    bound.update(A_drifted)              # value-only hierarchy refresh
 
     svc = AMGService(cfg, coalesce_window=0.05)
     mid = svc.register_wire(csr_to_wire(A))      # by fingerprint
@@ -45,10 +47,13 @@ The cycle shape and smoother live in ``config.opts``
 (:class:`~repro.amg.solve.SolveOptions`) — they are *solve* knobs, so two
 configs that differ only there share one hierarchy and one dist lowering.
 """
-from .config import (AMGConfig, WIRE_SCHEMA, WireError, array_from_wire,
-                     array_to_wire, csr_from_wire, csr_to_wire,
-                     matrix_fingerprint, solve_request_from_wire,
-                     solve_request_to_wire)
+from .config import (AMGConfig, PatternMismatch, RefreshPolicy,
+                     RequestOptions, SUPPORTED_SCHEMAS, WIRE_SCHEMA,
+                     WireError, apply_update, array_from_wire, array_to_wire,
+                     csr_from_wire, csr_to_wire, matrix_fingerprint,
+                     pattern_fingerprint, solve_request_from_wire,
+                     solve_request_to_wire, update_request_from_wire,
+                     update_request_to_wire)
 from .registry import (available_backends, backend_class, bind_hierarchy,
                        register_backend)
 from .sessions import (AMGSolver, BoundSolver, BytesBudgetPolicy, CacheEntry,
@@ -56,18 +61,19 @@ from .sessions import (AMGSolver, BoundSolver, BytesBudgetPolicy, CacheEntry,
                        LRUPolicy, SESSION_CACHE_SIZE, SessionStore, TTLPolicy,
                        clear_sessions, session_count, session_nbytes)
 from .service import (AMGService, PRIORITY_CLASSES, ServiceClosed,
-                      ServiceReport, SolveRequest, SolverEngine, Ticket)
+                      ServiceReport, Ticket)
 
 __all__ = [
     "AMGConfig", "AMGService", "AMGSolver", "BoundSolver",
     "BytesBudgetPolicy", "CacheEntry", "DistBoundSolver", "EvictionPolicy",
-    "HostBoundSolver", "LRUPolicy", "PRIORITY_CLASSES",
-    "SESSION_CACHE_SIZE", "ServiceClosed", "ServiceReport", "SessionStore",
-    "SolveRequest",
-    "SolverEngine", "TTLPolicy", "Ticket", "WIRE_SCHEMA", "WireError",
+    "HostBoundSolver", "LRUPolicy", "PRIORITY_CLASSES", "PatternMismatch",
+    "RefreshPolicy", "RequestOptions", "SESSION_CACHE_SIZE",
+    "SUPPORTED_SCHEMAS", "ServiceClosed", "ServiceReport", "SessionStore",
+    "TTLPolicy", "Ticket", "WIRE_SCHEMA", "WireError", "apply_update",
     "array_from_wire", "array_to_wire", "available_backends",
     "backend_class", "bind_hierarchy", "clear_sessions", "csr_from_wire",
-    "csr_to_wire", "matrix_fingerprint", "register_backend",
-    "session_count", "session_nbytes", "solve_request_from_wire",
-    "solve_request_to_wire",
+    "csr_to_wire", "matrix_fingerprint", "pattern_fingerprint",
+    "register_backend", "session_count", "session_nbytes",
+    "solve_request_from_wire", "solve_request_to_wire",
+    "update_request_from_wire", "update_request_to_wire",
 ]

@@ -19,8 +19,19 @@ instead of being half-applied):
   fingerprint as an integrity check.
 * :func:`solve_request_to_wire` / :func:`solve_request_from_wire` — one
   solve admission (``b`` payload of shape ``[n]`` or ``[n, k]``, per-request
-  ``tol``/``maxiter``/``x0``/``priority``), consumed by
+  :class:`RequestOptions` + ``priority``), consumed by
   :meth:`~repro.amg.api.service.AMGService.submit_wire`.
+* :func:`update_request_to_wire` / :func:`update_request_from_wire` —
+  schema-v2 streaming update: a full replacement CSR, a values-only
+  payload, or an additive ``ΔA`` on the registered matrix's frozen
+  sparsity pattern, addressed by registered fingerprint.
+
+**Versioning.**  ``WIRE_SCHEMA`` is what this codec *emits*;
+``SUPPORTED_SCHEMAS`` is what it *accepts*.  v1 frames still decode —
+the v2 additions are purely additive (the ``update`` kind and the nested
+``options`` key on solve requests).  A v1-tagged frame carrying a
+v2-only key is rejected under strict decode (the default) and tolerated
+under ``strict=False`` (a permissive proxy in front of an old client).
 """
 from __future__ import annotations
 
@@ -35,7 +46,10 @@ from ..solve import SolveOptions
 
 _DTYPES = ("float32", "float64", "bfloat16")
 
-WIRE_SCHEMA = 1
+#: Schema version this codec emits.
+WIRE_SCHEMA = 2
+#: Schema versions this codec accepts (v1 frames are a strict subset).
+SUPPORTED_SCHEMAS = (1, 2)
 
 
 class WireError(ValueError):
@@ -43,9 +57,93 @@ class WireError(ValueError):
     wrong kind, or a corrupt/fingerprint-mismatched body)."""
 
 
+class PatternMismatch(ValueError):
+    """A streaming update's sparsity pattern does not match the session's
+    frozen pattern — a value-only refresh is impossible.  Raised instead
+    of silently re-running setup; callers escalate explicitly."""
+
+
 # --------------------------------------------------------------------------
 # Configuration
 # --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPolicy:
+    """When does a streamed value update escalate to a full re-setup?
+
+    A session tracks each solve's iteration count against the *baseline*
+    (the first solve after the most recent setup or re-setup).  A
+    value-only refresh keeps the frozen hierarchy; once convergence has
+    regressed past ``regress_ratio × baseline + regress_slack``
+    iterations, the next update triggers a full node-aware re-setup
+    instead (pattern changes always do)."""
+
+    regress_ratio: float = 1.5
+    regress_slack: int = 2
+
+    def __post_init__(self):
+        if self.regress_ratio < 1.0:
+            raise ValueError(f"regress_ratio must be >= 1, "
+                             f"got {self.regress_ratio}")
+        if self.regress_slack < 0:
+            raise ValueError(f"regress_slack must be >= 0, "
+                             f"got {self.regress_slack}")
+
+    def regressed(self, baseline: int | None, iterations: int) -> bool:
+        """Has ``iterations`` regressed past the post-setup baseline?"""
+        if baseline is None:
+            return False
+        return iterations > self.regress_ratio * baseline + self.regress_slack
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RequestOptions:
+    """Per-request solve knobs, unified across the three call surfaces
+    (:meth:`AMGService.submit`, wire solve requests, and the
+    ``solve``/``pcg`` free functions).
+
+    ``tol``/``maxiter`` default to ``None`` = "use the session config's
+    default" — :meth:`resolve` pins them so equal resolved options mean
+    interchangeable requests.  ``x0`` is a warm start and deliberately
+    **not** part of :meth:`group_key` (requests with different warm
+    starts still coalesce into one multi-RHS batch)."""
+
+    method: str = "solve"
+    tol: float | None = None
+    maxiter: int | None = None
+    x0: np.ndarray | None = None
+
+    def __post_init__(self):
+        if self.method not in ("solve", "pcg"):
+            raise ValueError(f"unknown method {self.method!r}; "
+                             f"must be 'solve' or 'pcg'")
+
+    def resolve(self, config: "AMGConfig") -> "RequestOptions":
+        """Pin ``tol``/``maxiter`` from the session config's defaults."""
+        tol = config.tol if self.tol is None else float(self.tol)
+        maxiter = self.maxiter
+        if maxiter is None:
+            maxiter = (config.pcg_maxiter if self.method == "pcg"
+                       else config.maxiter)
+        return dataclasses.replace(self, tol=tol, maxiter=int(maxiter))
+
+    def group_key(self) -> tuple:
+        """The coalescing key: requests with equal keys may batch into one
+        multi-RHS solve (the warm start rides per-request, not per-key)."""
+        return (self.method, self.tol, self.maxiter)
+
+    def to_wire_fields(self) -> dict:
+        """The request-payload fields this carries (flat, v1-compatible;
+        absent fields mean "config default")."""
+        d: dict = {"method": self.method}
+        if self.tol is not None:
+            d["tol"] = float(self.tol)
+        if self.maxiter is not None:
+            d["maxiter"] = int(self.maxiter)
+        if self.x0 is not None:
+            d["x0"] = array_to_wire(np.asarray(self.x0))
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +184,9 @@ class AMGConfig:
     # halo-exchange/compute overlap in every distributed apply; False keeps
     # the serial fused form (the parity oracle)
     overlap: bool = True
+    # streaming sessions: when does an A + ΔA update escalate from a
+    # value-only refresh to a full node-aware re-setup
+    refresh: RefreshPolicy = dataclasses.field(default_factory=RefreshPolicy)
 
     def __post_init__(self):
         if self.dtype not in _DTYPES:
@@ -121,7 +222,11 @@ class AMGConfig:
         opts = d.pop("opts", None)
         if isinstance(opts, dict):
             opts = SolveOptions(**opts)
-        return cls(opts=opts or SolveOptions(), **d)
+        refresh = d.pop("refresh", None)
+        if isinstance(refresh, dict):
+            refresh = RefreshPolicy(**refresh)
+        return cls(opts=opts or SolveOptions(),
+                   refresh=refresh or RefreshPolicy(), **d)
 
     # ------------------------------------------------------------------ wire
     def to_wire(self) -> dict:
@@ -139,16 +244,18 @@ class AMGConfig:
         if unknown:
             raise WireError(f"amg_config payload has unknown key(s) "
                             f"{sorted(unknown)}; known: {sorted(known)}")
-        opts = body.get("opts")
-        if opts is not None:
-            if not isinstance(opts, dict):
-                raise WireError(f"amg_config opts must be a dict of "
-                                f"SolveOptions fields, got {type(opts)}")
-            oknown = {f.name for f in dataclasses.fields(SolveOptions)}
-            ounknown = set(opts) - oknown
-            if ounknown:
-                raise WireError(f"amg_config opts has unknown key(s) "
-                                f"{sorted(ounknown)}; known: {sorted(oknown)}")
+        for key, klass in (("opts", SolveOptions), ("refresh", RefreshPolicy)):
+            nested = body.get(key)
+            if nested is None:
+                continue
+            if not isinstance(nested, dict):
+                raise WireError(f"amg_config {key} must be a dict of "
+                                f"{klass.__name__} fields, got {type(nested)}")
+            nknown = {f.name for f in dataclasses.fields(klass)}
+            nunknown = set(nested) - nknown
+            if nunknown:
+                raise WireError(f"amg_config {key} has unknown key(s) "
+                                f"{sorted(nunknown)}; known: {sorted(nknown)}")
         try:
             return cls.from_dict(body)
         except (TypeError, ValueError) as e:
@@ -188,20 +295,38 @@ def matrix_fingerprint(A: CSR) -> str:
     return h.hexdigest()
 
 
+def pattern_fingerprint(A: CSR) -> str:
+    """Hash of the sparsity pattern only (shape + indptr + indices, no
+    values) — the streaming-session invariant: two matrices with equal
+    pattern fingerprints share every comm graph, halo plan, ELL layout
+    and compiled program, so updates between them are value-only."""
+    h = hashlib.sha1()
+    h.update(np.asarray(A.shape, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(A.indptr).tobytes())
+    h.update(np.ascontiguousarray(A.indices).tobytes())
+    return h.hexdigest()
+
+
 # --------------------------------------------------------------------------
 # Wire primitives
 # --------------------------------------------------------------------------
 
 
-def _check_envelope(payload, kind: str) -> dict:
+def _check_envelope(payload, kind: str, *, min_schema: int = 1) -> dict:
     """Validate the ``schema``/``kind`` envelope; return the body (a copy
-    of the payload without the envelope keys)."""
+    of the payload without the envelope keys).  Any schema version in
+    :data:`SUPPORTED_SCHEMAS` is accepted; ``min_schema`` floors kinds
+    that did not exist before a given version (e.g. v2 ``update``)."""
     if not isinstance(payload, dict):
         raise WireError(f"wire payload must be a dict, got {type(payload)}")
     schema = payload.get("schema")
-    if schema != WIRE_SCHEMA:
+    if schema not in SUPPORTED_SCHEMAS:
         raise WireError(f"wire schema version mismatch: payload has "
-                        f"{schema!r}, this codec speaks {WIRE_SCHEMA}")
+                        f"{schema!r}, this codec speaks "
+                        f"{list(SUPPORTED_SCHEMAS)}")
+    if schema < min_schema:
+        raise WireError(f"{kind!r} payloads require schema >= {min_schema}, "
+                        f"got {schema}")
     got = payload.get("kind")
     if got != kind:
         raise WireError(f"expected a {kind!r} payload, got kind={got!r}")
@@ -296,26 +421,33 @@ def csr_from_wire(payload: dict) -> tuple[CSR, str]:
     return A, fp
 
 
+# v1 request keys; "options" arrived with schema 2 (a v1-tagged frame
+# carrying it is rejected under strict decode, tolerated otherwise)
 _REQUEST_KEYS = {"matrix", "b", "method", "tol", "maxiter", "x0", "priority",
                  "rid"}
+_V2_REQUEST_KEYS = {"options"}
 
 
 def solve_request_to_wire(matrix_id: str, b: np.ndarray, *,
-                          method: str = "solve", tol: float | None = None,
+                          options: RequestOptions | None = None,
+                          method: str | None = None, tol: float | None = None,
                           maxiter: int | None = None,
                           x0: np.ndarray | None = None,
                           priority=None, rid: int | None = None) -> dict:
     """Encode one solve admission (``b``: [n] or [n, k]) for
-    :meth:`~repro.amg.api.service.AMGService.submit_wire`."""
+    :meth:`~repro.amg.api.service.AMGService.submit_wire`.
+
+    The solve knobs travel as the flat v1 field set (``method``/``tol``/
+    ``maxiter``/``x0``) so v1 decoders still read v2 frames; pass either
+    an ``options`` dataclass or the individual fields, not both."""
+    if options is None:
+        options = RequestOptions(method=method or "solve", tol=tol,
+                                 maxiter=maxiter, x0=x0)
+    elif any(v is not None for v in (method, tol, maxiter, x0)):
+        raise ValueError("pass options= or individual solve knobs, not both")
     d = {"schema": WIRE_SCHEMA, "kind": "solve_request",
          "matrix": matrix_id, "b": array_to_wire(np.asarray(b)),
-         "method": method}
-    if tol is not None:
-        d["tol"] = float(tol)
-    if maxiter is not None:
-        d["maxiter"] = int(maxiter)
-    if x0 is not None:
-        d["x0"] = array_to_wire(np.asarray(x0))
+         **options.to_wire_fields()}
     if priority is not None:
         d["priority"] = priority
     if rid is not None:
@@ -323,29 +455,137 @@ def solve_request_to_wire(matrix_id: str, b: np.ndarray, *,
     return d
 
 
-def solve_request_from_wire(payload: dict) -> dict:
+def solve_request_from_wire(payload: dict, *, strict: bool = True) -> dict:
     """Strict decode of a solve request; returns kwargs for
-    :meth:`AMGService.submit` (arrays materialized, unknown keys rejected)."""
+    :meth:`AMGService.submit` — ``{"matrix_id", "b", "options", ...}``
+    with the solve knobs folded into one :class:`RequestOptions`.
+
+    Accepts both the flat v1 knob fields and the nested v2 ``options``
+    dict.  Under ``strict`` (the default) a v1-tagged frame carrying the
+    v2-only ``options`` key is rejected; ``strict=False`` tolerates the
+    additive key."""
     body = _check_envelope(payload, "solve_request")
-    unknown = set(body) - _REQUEST_KEYS
+    schema = payload.get("schema")
+    unknown = set(body) - _REQUEST_KEYS - _V2_REQUEST_KEYS
     if unknown:
         raise WireError(f"solve_request payload has unknown key(s) "
-                        f"{sorted(unknown)}; known: {sorted(_REQUEST_KEYS)}")
+                        f"{sorted(unknown)}; known: "
+                        f"{sorted(_REQUEST_KEYS | _V2_REQUEST_KEYS)}")
+    if strict and schema < 2:
+        additive = set(body) & _V2_REQUEST_KEYS
+        if additive:
+            raise WireError(f"schema-{schema} solve_request carries "
+                            f"v2-only key(s) {sorted(additive)} "
+                            f"(strict decode)")
     try:
-        out = {"matrix_id": body["matrix"],
-               "b": array_from_wire(body["b"]),
-               "method": body.get("method", "solve")}
+        out = {"matrix_id": body["matrix"], "b": array_from_wire(body["b"])}
     except KeyError as e:
         raise WireError(f"solve_request payload missing {e.args[0]!r}") \
             from None
-    if "tol" in body:
-        out["tol"] = float(body["tol"])
-    if "maxiter" in body:
-        out["maxiter"] = int(body["maxiter"])
-    if "x0" in body:
-        out["x0"] = array_from_wire(body["x0"])
+    raw = body.get("options") if (schema >= 2 or not strict) else None
+    if raw is not None and not isinstance(raw, dict):
+        raise WireError(f"solve_request options must be a dict, "
+                        f"got {type(raw)}")
+    knobs = dict(raw or {})
+    oknown = {"method", "tol", "maxiter", "x0"}
+    ounknown = set(knobs) - oknown
+    if ounknown:
+        raise WireError(f"solve_request options has unknown key(s) "
+                        f"{sorted(ounknown)}; known: {sorted(oknown)}")
+    for key in oknown:                      # flat v1 fields fill the gaps
+        if key in body and key not in knobs:
+            knobs[key] = body[key]
+    try:
+        out["options"] = RequestOptions(
+            method=str(knobs.get("method", "solve")),
+            tol=float(knobs["tol"]) if "tol" in knobs else None,
+            maxiter=int(knobs["maxiter"]) if "maxiter" in knobs else None,
+            x0=array_from_wire(knobs["x0"]) if "x0" in knobs else None)
+    except ValueError as e:
+        raise WireError(f"solve_request options rejected: {e}") from e
     if "priority" in body:
         out["priority"] = body["priority"]
     if "rid" in body:
         out["rid"] = int(body["rid"])
     return out
+
+
+# --------------------------------------------------------------------------
+# Streaming updates (schema v2)
+# --------------------------------------------------------------------------
+
+_UPDATE_KEYS = {"matrix", "csr", "data", "delta", "rid"}
+
+
+def update_request_to_wire(matrix_id: str, A: CSR | None = None, *,
+                           data: np.ndarray | None = None,
+                           delta: np.ndarray | None = None,
+                           dtype: str = "float64",
+                           rid: int | None = None) -> dict:
+    """Encode a streaming matrix update addressed to a registered matrix.
+
+    Exactly one payload form:
+
+    * ``A`` — a full replacement CSR (the server decides refresh vs
+      re-setup by comparing sparsity patterns);
+    * ``data`` — new values on the registered matrix's frozen pattern
+      (``A_new.data`` in CSR order, ``nnz`` floats);
+    * ``delta`` — additive ``ΔA`` values on the frozen pattern
+      (``A_new = A_old + ΔA``), the cheapest form for slow drift.
+    """
+    forms = [A is not None, data is not None, delta is not None]
+    if sum(forms) != 1:
+        raise ValueError("update needs exactly one of A=, data= or delta=")
+    d: dict = {"schema": WIRE_SCHEMA, "kind": "update_request",
+               "matrix": matrix_id}
+    if A is not None:
+        d["csr"] = csr_to_wire(A, dtype)
+    elif data is not None:
+        d["data"] = array_to_wire(np.asarray(data, dtype=np.float64), dtype)
+    else:
+        d["delta"] = array_to_wire(np.asarray(delta, dtype=np.float64), dtype)
+    if rid is not None:
+        d["rid"] = int(rid)
+    return d
+
+
+def update_request_from_wire(payload: dict) -> dict:
+    """Strict decode of an update request; returns kwargs for
+    :meth:`AMGService.update` (``matrix_id`` + exactly one of
+    ``A``/``data``/``delta``).  Requires schema >= 2."""
+    body = _check_envelope(payload, "update_request", min_schema=2)
+    unknown = set(body) - _UPDATE_KEYS
+    if unknown:
+        raise WireError(f"update_request payload has unknown key(s) "
+                        f"{sorted(unknown)}; known: {sorted(_UPDATE_KEYS)}")
+    if "matrix" not in body:
+        raise WireError("update_request payload missing 'matrix'")
+    forms = [k for k in ("csr", "data", "delta") if k in body]
+    if len(forms) != 1:
+        raise WireError(f"update_request needs exactly one of "
+                        f"csr/data/delta, got {forms or 'none'}")
+    out: dict = {"matrix_id": body["matrix"]}
+    if "csr" in body:
+        out["A"], _ = csr_from_wire(body["csr"])
+    elif "data" in body:
+        out["data"] = array_from_wire(body["data"]).astype(np.float64)
+    else:
+        out["delta"] = array_from_wire(body["delta"]).astype(np.float64)
+    if "rid" in body:
+        out["rid"] = int(body["rid"])
+    return out
+
+
+def apply_update(A: CSR, *, data: np.ndarray | None = None,
+                 delta: np.ndarray | None = None) -> CSR:
+    """Materialize a values-only update on ``A``'s frozen pattern."""
+    if (data is None) == (delta is None):
+        raise ValueError("pass exactly one of data= or delta=")
+    vals = np.asarray(data if data is not None else delta, dtype=np.float64)
+    if vals.shape != A.data.shape:
+        raise PatternMismatch(
+            f"update carries {vals.shape[0] if vals.ndim else 0} values for "
+            f"a pattern with {A.data.shape[0]} nonzeros")
+    new = vals if data is not None else A.data + vals
+    return CSR(A.shape, np.ascontiguousarray(A.indptr),
+               np.ascontiguousarray(A.indices), np.ascontiguousarray(new))

@@ -9,47 +9,51 @@ is that surface:
   immediately; ``ticket.result()`` blocks until the scheduler has run the
   solve.  Requests carry per-request ``tol``/``maxiter``/``x0`` warm starts
   and ``b`` payloads of shape ``[n]`` or ``[n, k]``.
-* **Cross-burst coalescing** — requests with the same (matrix, method,
-  tol, maxiter) group key that arrive within one ``coalesce_window`` are
-  stacked into ONE multi-RHS device trace, even when they were submitted
-  in separate bursts (the old ``SolverEngine`` could only batch inside a
-  single synchronous drain).
+* **Cross-burst coalescing** — requests whose
+  ``(matrix_id,) + RequestOptions.group_key()`` coalescing keys match and
+  that arrive within one ``coalesce_window`` are stacked into ONE
+  multi-RHS device trace, even when they were submitted in separate
+  bursts.
 * **Priority classes with starvation-free scheduling** — ``"interactive"``
   / ``"default"`` / ``"batch"`` (or any int; lower runs first); a waiting
   group's effective priority improves by one class per ``priority_aging``
   seconds, so a steady interactive stream can never starve batch work.
-* **Wire addressability** — :meth:`register_wire` / :meth:`submit_wire`
-  accept the encoded payloads of :mod:`repro.amg.api.config`, so the whole
-  service can be driven over a byte transport (matrices registered by
-  fingerprint, requests referencing them by that id).
+* **Wire addressability** — :meth:`register_wire` / :meth:`submit_wire` /
+  :meth:`update_wire` accept the encoded payloads of
+  :mod:`repro.amg.api.config`, so the whole service can be driven over a
+  byte transport (matrices registered by fingerprint, requests referencing
+  them by that id).
+* **Streaming updates** — :meth:`update` applies ``A + ΔA`` value drift to
+  a registered matrix under a STABLE matrix id: a pattern-matching update
+  refreshes the live session's values in place (hierarchy, NAP schedules
+  and compiled programs reused), escalating to a full node-aware re-setup
+  on convergence regression, a changed pattern, or an evicted session.
 * **Accounting** — :meth:`report` returns a :class:`ServiceReport` with
   per-request diagnostics plus the session store's hit/evict/setup-cost
-  counters (:meth:`SessionStore.stats`).
+  and refresh/re-setup counters (:meth:`SessionStore.stats`).
 
 Two execution modes share the same scheduler: a background worker thread
 (:meth:`start`/:meth:`close`, or the context manager) that honors the
 coalescing window in real time, and the synchronous :meth:`drain` (no
-thread, window treated as already elapsed) for deterministic callers —
-:class:`SolverEngine`, kept as a thin deprecation shim, is exactly that.
+thread, window treated as already elapsed) for deterministic callers.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-import warnings
 
 import numpy as np
 
 from ..csr import CSR
 from ..solve import MultiSolveResult
-from .config import (AMGConfig, csr_from_wire, matrix_fingerprint,
-                     solve_request_from_wire)
+from .config import (AMGConfig, PatternMismatch, RequestOptions,
+                     apply_update, csr_from_wire, matrix_fingerprint,
+                     solve_request_from_wire, update_request_from_wire)
 from .sessions import (AMGSolver, BoundSolver, BytesBudgetPolicy, LRUPolicy,
                        SessionStore, _csr_nbytes)
 
 PRIORITY_CLASSES = {"interactive": 0, "default": 1, "batch": 2}
-_METHODS = ("solve", "pcg")
 
 
 class ServiceClosed(RuntimeError):
@@ -60,16 +64,6 @@ class ServiceClosed(RuntimeError):
     default flushing close only requests admitted during the shutdown race
     see it) — a typed, immediate failure instead of a ``result(timeout=)``
     expiry."""
-
-
-@dataclasses.dataclass
-class SolveRequest:
-    """Legacy request record consumed by the :class:`SolverEngine` shim."""
-
-    rid: int
-    matrix_id: str
-    b: np.ndarray
-    method: str = "solve"        # "solve" | "pcg"
 
 
 class Ticket:
@@ -152,13 +146,19 @@ class ServiceReport:
         lines = [
             f"requests={s['requests']} (wire={s['wire_requests']}) "
             f"batches={s['batches']} batched_rhs={s['batched_rhs']} "
-            f"setups={s['setups']} unconverged={s['unconverged']} "
-            f"errors={s['errors']}",
+            f"setups={s['setups']} updates={s['updates']} "
+            f"unconverged={s['unconverged']} errors={s['errors']}",
             f"store[{st['policy']}]: entries={st['entries']} "
             f"bytes={st['bytes']} hits={st['hits']} misses={st['misses']} "
             f"evictions={st['evictions']} expirations={st['expirations']} "
             f"setup_cost_total={st['setup_cost_total']:.3f}s",
         ]
+        if st.get("refreshes") or st.get("resetups"):
+            trig = ",".join(f"{k}:{v}" for k, v in
+                            sorted(st.get("triggers", {}).items()))
+            lines.append(
+                f"streaming: refreshes={st['refreshes']} "
+                f"resetups={st['resetups']} triggers=[{trig}]")
         if self.matrices:
             m = self.matrices
             lines.append(
@@ -183,8 +183,9 @@ class _Pending:
 
 @dataclasses.dataclass
 class _Group:
-    """Requests sharing one (matrix, method, tol, maxiter) coalescing key;
-    everything in a group can ride the same multi-RHS device trace."""
+    """Requests sharing one ``(matrix_id,) + RequestOptions.group_key()``
+    coalescing key; everything in a group can ride the same multi-RHS
+    device trace."""
 
     key: tuple
     created: float
@@ -242,7 +243,7 @@ class AMGService:
         self._next_rid = 0
         self.stats = {"requests": 0, "wire_requests": 0, "batches": 0,
                       "batched_rhs": 0, "setups": 0, "unconverged": 0,
-                      "errors": 0}
+                      "updates": 0, "errors": 0}
         # per-request diagnostics of the most recent `diagnostics_limit`
         # executed solves (bounded so a long-lived service cannot grow
         # without limit; tickets keep their own copy regardless)
@@ -337,25 +338,36 @@ class AMGService:
         return bound
 
     # -------------------------------------------------------------- admission
-    def submit(self, matrix_id: str, b, *, method: str = "solve",
-               tol: float | None = None, maxiter: int | None = None,
-               x0=None, priority=None, rid: int | None = None) -> Ticket:
+    def submit(self, matrix_id: str, b, *,
+               options: RequestOptions | None = None,
+               method: str | None = None, tol: float | None = None,
+               maxiter: int | None = None, x0=None, priority=None,
+               rid: int | None = None) -> Ticket:
         """Admit one solve; returns a :class:`Ticket` immediately.
 
-        ``b`` is ``[n]`` or ``[n, k]``; ``tol``/``maxiter`` default to the
-        service config's; requests sharing (matrix, method, tol, maxiter)
-        coalesce into one device trace when admitted within one window.
+        Per-request knobs travel as ONE frozen
+        :class:`~repro.amg.api.config.RequestOptions` (``options=``); the
+        individual ``method``/``tol``/``maxiter``/``x0`` kwargs are sugar
+        that constructs it and cannot be mixed with ``options=``.  ``b``
+        is ``[n]`` or ``[n, k]``; requests sharing
+        ``(matrix_id,) + options.group_key()`` coalesce into one device
+        trace when admitted within one window.
         """
+        if options is None:
+            options = RequestOptions(method=method or "solve", tol=tol,
+                                     maxiter=maxiter, x0=x0)
+        elif any(v is not None for v in (method, tol, maxiter, x0)):
+            raise ValueError("pass options= or individual solve knobs, "
+                             "not both")
         A, _ = self._lookup_matrix(matrix_id)
-        if method not in _METHODS:
-            raise ValueError(f"unknown method {method!r}; "
-                             f"supported: {_METHODS}")
+        options = options.resolve(self.config)
         n = A.nrows
         b = np.asarray(b)
         if (b.ndim not in (1, 2) or b.shape[0] != n
                 or (b.ndim == 2 and b.shape[1] == 0)):
             raise ValueError(f"b must be [{n}] or [{n}, k] with k >= 1, "
                              f"got shape {b.shape}")
+        x0 = options.x0
         if x0 is not None:
             x0 = np.asarray(x0)
             if x0.shape != b.shape:
@@ -366,12 +378,7 @@ class AMGService:
         # caller reusing its buffer must not corrupt the queued request
         b = b.copy()
         prio = self._resolve_priority(priority)
-        tol = float(self.config.tol if tol is None else tol)
-        if maxiter is None:
-            maxiter = (self.config.pcg_maxiter if method == "pcg"
-                       else self.config.maxiter)
-        maxiter = int(maxiter)
-        key = (matrix_id, method, tol, maxiter)
+        key = (matrix_id,) + options.group_key()
         now = self._clock()
         with self._cond:
             if rid is None:
@@ -391,7 +398,62 @@ class AMGService:
         :func:`~repro.amg.api.config.solve_request_to_wire`)."""
         kwargs = solve_request_from_wire(payload)
         self.stats["wire_requests"] += 1
-        return self.submit(**kwargs)
+        return self.submit(kwargs.pop("matrix_id"), kwargs.pop("b"),
+                           **kwargs)
+
+    # ------------------------------------------------------ streaming updates
+    def update(self, matrix_id: str, A_new: CSR | None = None, *,
+               data=None, delta=None) -> dict:
+        """Apply a streaming value update to a registered matrix.
+
+        The matrix id stays STABLE across updates — in-flight and future
+        requests keep addressing it.  Exactly one of ``A_new`` (full CSR),
+        ``data`` (values on the frozen pattern) or ``delta`` (additive ΔA).
+        Routing: a live session with a matching pattern takes the
+        value-only refresh (or its policy-escalated re-setup); a changed
+        pattern or an evicted session runs a full setup.  Returns
+        ``{"matrix": id, "action": "refresh"|"resetup", "reason": ...}``.
+        """
+        A_old, fp = self._lookup_matrix(matrix_id)
+        if A_new is None:
+            A_new = apply_update(A_old, data=data, delta=delta)
+        elif data is not None or delta is not None:
+            raise ValueError("pass A_new or data=/delta=, not both")
+        self.stats["updates"] += 1
+        bound = self.store.get((fp, self.solver.config))
+        if bound is not None:
+            try:
+                action = bound.update(A_new)
+                reason = bound.last_update_reason
+                self._matrices.put(matrix_id,
+                                   (bound._fine, bound._fingerprint),
+                                   nbytes=_csr_nbytes(bound._fine))
+                return {"matrix": matrix_id, "action": action,
+                        "reason": reason}
+            except PatternMismatch:
+                # structural change: the session cannot refresh — the
+                # service escalates explicitly with a full setup
+                reason = "pattern"
+        else:
+            reason = "evicted"
+        fp_new = matrix_fingerprint(A_new)
+        self.register(matrix_id, A_new, fingerprint=fp_new)
+        self.bound_for(matrix_id)                   # full (re-)setup
+        self.store.note_update("resetup", reason)
+        return {"matrix": matrix_id, "action": "resetup", "reason": reason}
+
+    def update_wire(self, payload: dict) -> dict:
+        """Apply one encoded update request (see
+        :func:`~repro.amg.api.config.update_request_to_wire`); returns the
+        :meth:`update` result with the request's ``rid`` echoed."""
+        kwargs = update_request_from_wire(payload)
+        self.stats["wire_requests"] += 1
+        rid = kwargs.pop("rid", None)
+        out = self.update(kwargs.pop("matrix_id"), kwargs.pop("A", None),
+                          **kwargs)
+        if rid is not None:
+            out["rid"] = rid
+        return out
 
     @staticmethod
     def _resolve_priority(priority) -> int:
@@ -550,56 +612,3 @@ class AMGService:
                                           self.diagnostics.items()},
                              store=self.store.stats(),
                              matrices=self._matrices.stats())
-
-
-# --------------------------------------------------------------------------
-# Deprecated synchronous engine (thin shim over AMGService)
-# --------------------------------------------------------------------------
-
-
-class SolverEngine:
-    """Deprecated synchronous drain loop — use :class:`AMGService`.
-
-    Kept as a thin shim so existing call sites keep working: ``submit``
-    admits :class:`SolveRequest` s into an internal service, ``run()`` is
-    ``service.drain()``.  Stats/diagnostics are the service's (a strict
-    superset of the old counters).
-    """
-
-    def __init__(self, config: AMGConfig | None = None, max_rhs: int = 8):
-        warnings.warn(
-            "SolverEngine is deprecated; use AMGService (ticketed async "
-            "admission, cross-burst coalescing, wire payloads)",
-            DeprecationWarning, stacklevel=2)
-        self.service = AMGService(config, max_rhs=max_rhs)
-        self.max_rhs = self.service.max_rhs
-        self.solver = self.service.solver
-
-    @property
-    def stats(self) -> dict:
-        return self.service.stats
-
-    @property
-    def diagnostics(self) -> dict:
-        return self.service.diagnostics
-
-    def add_matrix(self, matrix_id: str, A: CSR) -> None:
-        self.service.register(matrix_id, A)
-
-    def bound_for(self, matrix_id: str) -> BoundSolver:
-        return self.service.bound_for(matrix_id)
-
-    def submit(self, req: SolveRequest) -> None:
-        b = np.asarray(req.b, dtype=np.float64)
-        if b.ndim != 1:
-            raise ValueError(f"request {req.rid}: b must be 1-D, "
-                             f"got {b.shape} (use AMGService for [n, k] "
-                             f"payloads)")
-        self.service.submit(req.matrix_id, b, method=req.method, rid=req.rid)
-
-    def run(self) -> dict[int, np.ndarray]:
-        """Drain the queue; returns {rid: x}.  Per-request convergence
-        status lands in :attr:`diagnostics` (and ``stats["unconverged"]``)
-        — an x returned for an unconverged solve is best-effort."""
-        self.service.diagnostics.clear()
-        return self.service.drain()

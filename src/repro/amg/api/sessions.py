@@ -26,10 +26,12 @@ from collections import OrderedDict
 import numpy as np
 
 from ..csr import CSR
-from ..hierarchy import Hierarchy, setup as _hierarchy_setup
+from ..hierarchy import (Hierarchy, refresh_values as _hierarchy_refresh,
+                         setup as _hierarchy_setup)
 from ..solve import (MultiSolveResult, SolveOptions, host_pcg, host_solve,
                      host_vcycle)
-from .config import AMGConfig, matrix_fingerprint
+from .config import (AMGConfig, PatternMismatch, RequestOptions, apply_update,
+                     matrix_fingerprint, pattern_fingerprint)
 from .registry import backend_class, register_backend
 
 
@@ -161,7 +163,11 @@ class SessionStore:
         self._entries: "OrderedDict[object, CacheEntry]" = OrderedDict()
         self._lock = threading.RLock()
         self._counters = {"hits": 0, "misses": 0, "puts": 0, "evictions": 0,
-                          "expirations": 0, "setup_cost_evicted": 0.0}
+                          "expirations": 0, "setup_cost_evicted": 0.0,
+                          "refreshes": 0, "resetups": 0}
+        # streaming-update trigger reasons ("drift", "regression",
+        # "pattern", "evicted", …) -> count
+        self._triggers: dict[str, int] = {}
 
     def __len__(self) -> int:
         with self._lock:
@@ -218,12 +224,34 @@ class SessionStore:
         with self._lock:
             self._entries.clear()
 
+    def rekey(self, old_key, new_key) -> None:
+        """Move an entry to a new key without touching its accounting —
+        a streamed update changed the value fingerprint, but the session
+        object (and its setup cost / hit history) is the same."""
+        with self._lock:
+            entry = self._entries.pop(old_key, None)
+            if entry is not None:
+                self._entries[new_key] = entry
+                self._entries.move_to_end(new_key)
+
+    def note_update(self, action: str, reason: str) -> None:
+        """Record a streaming update: ``action`` is ``"refresh"`` (value-only
+        hierarchy reuse) or ``"resetup"`` (full node-aware re-setup),
+        ``reason`` the trigger ("drift", "regression", "pattern", …)."""
+        if action not in ("refresh", "resetup"):
+            raise ValueError(f"unknown update action {action!r}")
+        with self._lock:
+            self._counters[action + "es" if action == "refresh"
+                           else action + "s"] += 1
+            self._triggers[reason] = self._triggers.get(reason, 0) + 1
+
     def stats(self) -> dict:
         """Counters + resident totals (hit/evict/setup-cost accounting)."""
         with self._lock:
             for e in self._entries.values():
                 e.refresh_nbytes()
             return {**self._counters, "policy": self.policy.name,
+                    "triggers": dict(self._triggers),
                     "entries": len(self._entries),
                     "bytes": sum(e.nbytes for e in self._entries.values()),
                     "setup_cost_total": sum(e.setup_cost for e in
@@ -287,6 +315,19 @@ class BoundSolver:
     """
 
     backend_name = "?"
+    # ---- streaming-session state, populated by AMGSolver.setup.  A solver
+    # made through bind_hierarchy has none of it and cannot stream updates.
+    _fine: CSR | None = None          # canonical fine-grid CSR of the session
+    pattern_fp: str | None = None     # frozen sparsity-pattern fingerprint
+    _fingerprint: str | None = None   # full (values) fingerprint = store key
+    _store = None                     # SessionStore holding this session
+    _store_key = None
+    _plevels = None                   # partitioned levels (dist-born setup)
+    # convergence tracking for RefreshPolicy: baseline is the first solve
+    # after the most recent (re-)setup, last the most recent solve
+    baseline_iterations: int | None = None
+    last_iterations: int | None = None
+    last_update_reason: str | None = None   # trigger of the latest update()
 
     def __init__(self, config: AMGConfig, hierarchy: Hierarchy | None):
         # ``hierarchy`` is None on the setup_backend="dist" path: the levels
@@ -340,14 +381,115 @@ class BoundSolver:
     # -------------------------------------------------------------- methods
     def solve(self, b, *, tol: float | None = None,
               maxiter: int | None = None, x0=None):
-        raise NotImplementedError
+        res = self._solve(b, tol=tol, maxiter=maxiter, x0=x0)
+        self._observe(res)
+        return res
 
     def pcg(self, b, *, tol: float | None = None,
             maxiter: int | None = None, x0=None):
+        res = self._pcg(b, tol=tol, maxiter=maxiter, x0=x0)
+        self._observe(res)
+        return res
+
+    def run(self, b, options: RequestOptions | None = None):
+        """One request through the unified knob set: dispatches
+        ``options.method`` with its ``tol``/``maxiter``/``x0`` (``None``
+        knobs resolve to the session config's defaults)."""
+        o = (options or RequestOptions()).resolve(self.config)
+        fn = self.pcg if o.method == "pcg" else self.solve
+        return fn(b, tol=o.tol, maxiter=o.maxiter, x0=o.x0)
+
+    def _solve(self, b, *, tol: float | None = None,
+               maxiter: int | None = None, x0=None):
+        raise NotImplementedError
+
+    def _pcg(self, b, *, tol: float | None = None,
+             maxiter: int | None = None, x0=None):
         raise NotImplementedError
 
     def vcycle(self, b, x0=None):
         raise NotImplementedError
+
+    def _observe(self, result) -> None:
+        """Track iteration counts for the adaptive re-setup policy."""
+        it = getattr(result, "iterations", None)
+        if it is None:
+            return
+        self.last_iterations = int(it)
+        if self.baseline_iterations is None:
+            self.baseline_iterations = int(it)
+
+    # ---------------------------------------------------- streaming updates
+    def update(self, A_new: CSR | None = None, *, data=None,
+               delta=None) -> str:
+        """Streaming matrix update on the session's frozen pattern.
+
+        Exactly one of ``A_new`` (full replacement CSR), ``data`` (new
+        values in CSR order) or ``delta`` (additive ΔA values).  On a
+        pattern match the session performs a **value-only refresh**: the
+        fine values are re-lowered onto the frozen layouts, the Galerkin
+        products re-run numerically through the already-selected NAP
+        schedules, and smoother factors refreshed in place — compiled
+        programs are reused verbatim.  When the config's
+        :class:`~repro.amg.api.config.RefreshPolicy` says convergence has
+        regressed past the post-setup baseline, the update escalates to a
+        full node-aware re-setup instead.  Returns the action taken
+        (``"refresh"`` | ``"resetup"``).  A changed sparsity pattern
+        raises :class:`~repro.amg.api.config.PatternMismatch` — callers
+        escalate explicitly (the service re-runs ``setup``)."""
+        if self._fine is None:
+            raise ValueError(
+                "streaming updates need a session created by "
+                "AMGSolver.setup; this solver wraps a bare hierarchy")
+        if A_new is None:
+            A_new = apply_update(self._fine, data=data, delta=delta)
+        elif data is not None or delta is not None:
+            raise ValueError("pass A_new or data=/delta=, not both")
+        fp_pat = pattern_fingerprint(A_new)
+        if fp_pat != self.pattern_fp:
+            raise PatternMismatch(
+                f"update pattern {fp_pat[:12]} does not match the session's "
+                f"frozen pattern {self.pattern_fp[:12]}; a value-only "
+                f"refresh is impossible — re-run setup(A_new) for "
+                f"structural changes")
+        regressed = (self.last_iterations is not None and
+                     self.config.refresh.regressed(self.baseline_iterations,
+                                                   self.last_iterations))
+        if regressed or not self._can_refresh():
+            action = "resetup"
+            reason = "regression" if regressed else "evicted"
+            self._resetup(A_new)
+            self.baseline_iterations = None
+            self.last_iterations = None
+        else:
+            action, reason = "refresh", "drift"
+            self._refresh(A_new)
+        self.last_update_reason = reason
+        if self._store is not None:
+            self._store.note_update(action, reason)
+            self._rekey(A_new)
+        return action
+
+    def _rekey(self, A_new: CSR) -> None:
+        """Move the store entry onto the updated value fingerprint, so a
+        later ``setup(A_new)`` under the same config hits this session."""
+        fp = matrix_fingerprint(A_new)
+        new_key = (fp,) + tuple(self._store_key[1:])
+        self._store.rekey(self._store_key, new_key)
+        self._store_key = new_key
+        self._fingerprint = fp
+
+    def _can_refresh(self) -> bool:
+        return True
+
+    def _refresh(self, A_new: CSR) -> None:
+        _hierarchy_refresh(self.hierarchy, A_new)
+        self._fine = self.hierarchy.levels[0].A    # re-pointed by refresh
+
+    def _resetup(self, A_new: CSR) -> None:
+        self.hierarchy = _hierarchy_setup(A_new,
+                                          **self.config.setup_kwargs())
+        self._fine = self.hierarchy.levels[0].A
 
 
 @register_backend("host")
@@ -368,7 +510,7 @@ class HostBoundSolver(BoundSolver):
             xs.append(r.x)
         return MultiSolveResult(np.stack(xs, axis=1), cols)
 
-    def solve(self, b, *, tol=None, maxiter=None, x0=None):
+    def _solve(self, b, *, tol=None, maxiter=None, x0=None):
         b = self._check_b(b)
         tol = self.config.tol if tol is None else tol
         maxiter = self.config.maxiter if maxiter is None else maxiter
@@ -379,7 +521,7 @@ class HostBoundSolver(BoundSolver):
             return self._per_column(run, b, x0)
         return run(b, x0)
 
-    def pcg(self, b, *, tol=None, maxiter=None, x0=None):
+    def _pcg(self, b, *, tol=None, maxiter=None, x0=None):
         b = self._check_b(b)
         tol = self.config.tol if tol is None else tol
         maxiter = self.config.pcg_maxiter if maxiter is None else maxiter
@@ -456,7 +598,7 @@ class DistBoundSolver(BoundSolver):
                                       self.config.dist_build_kwargs())
         return self._dist
 
-    def solve(self, b, *, tol=None, maxiter=None, x0=None):
+    def _solve(self, b, *, tol=None, maxiter=None, x0=None):
         from ..dist_solve import dist_solve
         b = self._check_b(b)
         tol = self.config.tol if tol is None else tol
@@ -464,7 +606,7 @@ class DistBoundSolver(BoundSolver):
         return dist_solve(self.dist_hierarchy, b, tol=tol, maxiter=maxiter,
                           opts=self.opts, x0=x0)
 
-    def pcg(self, b, *, tol=None, maxiter=None, x0=None):
+    def _pcg(self, b, *, tol=None, maxiter=None, x0=None):
         from ..dist_solve import dist_pcg
         b = self._check_b(b)
         tol = self.config.tol if tol is None else tol
@@ -478,6 +620,53 @@ class DistBoundSolver(BoundSolver):
             raise ValueError("dist vcycle starts from x=0; x0= is not "
                              "supported on the dist backend")
         return dist_vcycle(self.dist_hierarchy, self._check_b(b), self.opts)
+
+    # ---------------------------------------------------- streaming updates
+    def _can_refresh(self) -> bool:
+        # a dist-born session refreshes through its partitioned levels; if
+        # they were evicted from the setup store, only a full re-setup can
+        # honor the update
+        return self.hierarchy is not None or self._plevels is not None
+
+    def _refresh(self, A_new: CSR) -> None:
+        if self.hierarchy is not None:
+            # refreshes every lowering in the hierarchy's dist_cache; a
+            # prebuilt lowering that bypassed the cache (unhashable build
+            # kwargs) is refreshed explicitly
+            _hierarchy_refresh(self.hierarchy, A_new)
+            self._fine = self.hierarchy.levels[0].A
+            cached = self.hierarchy.dist_cache.values()
+            if self._dist is not None and \
+                    all(dh is not self._dist for dh in cached):
+                self._dist.refresh_values(self.hierarchy.levels)
+            return
+        from ..dist_setup import refresh_partitioned_values
+        refresh_partitioned_values(self._plevels, A_new)
+        if self._dist is not None:
+            self._dist.refresh_values(self._plevels)
+        # copy-on-write, same as the host path: never mutate the caller's A
+        self._fine = CSR(self._fine.shape, self._fine.indptr,
+                         self._fine.indices,
+                         np.array(A_new.data, dtype=np.float64))
+
+    def _resetup(self, A_new: CSR) -> None:
+        if self.hierarchy is not None:
+            super()._resetup(A_new)
+            self._dist = None            # re-lowered lazily on next solve
+            return
+        from ...core import MACHINES
+        from ..dist_setup import dist_setup_partitioned
+        from ..dist_solve import DistHierarchy
+        c = self.config
+        plevels, records = dist_setup_partitioned(
+            A_new, c.n_pods, c.lanes, params=MACHINES[c.machine],
+            strategy=c.strategy, **c.setup_kwargs())
+        bk = c.dist_build_kwargs()
+        self._dist = DistHierarchy.from_partitioned(
+            plevels, bk.pop("n_pods"), bk.pop("lanes"),
+            setup_records=records, **bk)
+        self._plevels = plevels
+        self._fine = A_new
 
 
 # --------------------------------------------------------------------------
@@ -557,6 +746,15 @@ class AMGSolver:
                                      nbytes=session_nbytes(h),
                                      setup_cost=time.perf_counter() - t1)
             bound = backend_class(self.config.backend)(self.config, h)
+        # streaming-session state: the canonical fine CSR (the hierarchy's
+        # own level-0 object on host paths, so delta updates compose), the
+        # frozen pattern fingerprint and the store linkage update() re-keys
+        bound._fine = (bound.hierarchy.levels[0].A
+                       if bound.hierarchy is not None else A)
+        bound._fingerprint = fp
+        bound.pattern_fp = pattern_fingerprint(A)
+        bound._store = self.store
+        bound._store_key = key
         # nbytes_fn: a dist session's device arrays are lowered lazily on
         # first solve, so resident bytes are re-measured at eviction time
         self.store.put(key, bound, nbytes=session_nbytes(bound),
@@ -576,11 +774,11 @@ class AMGSolver:
         c = self.config
         base = (fp, tuple(sorted(c.setup_kwargs().items())),
                 c.n_pods, c.lanes, c.strategy, c.machine)
+        pkey = base + ("dist_partitioned",)
         skey = base + ("dist_lowered", c.dtype, c.use_kernel, c.interpret,
                        c.reduce_strategy, c.overlap)
         dh = self.setup_store.get(skey)
         if dh is None:
-            pkey = base + ("dist_partitioned",)
             cached = self.setup_store.get(pkey)
             if cached is None:
                 from ...core import MACHINES
@@ -601,4 +799,11 @@ class AMGSolver:
                 setup_records=records, **bk)
             self.setup_store.put(skey, dh, nbytes=session_nbytes(dh),
                                  setup_cost=time.perf_counter() - t0)
-        return backend_class(c.backend).from_dist_setup(c, dh)
+        bound = backend_class(c.backend).from_dist_setup(c, dh)
+        # partitioned blocks are the refresh target for streamed updates;
+        # when they were evicted between setup and update, update()
+        # escalates to a full re-setup instead
+        part_cached = self.setup_store.get(pkey)
+        if part_cached is not None:
+            bound._plevels = part_cached[0]
+        return bound

@@ -260,7 +260,8 @@ def dist_spgemm(Ab: BlockMatrix, Bb: BlockMatrix, *,
                 params: MachineParams = TPU_V5E, strategy: str = "auto",
                 strategies: tuple[str, ...] = SETUP_STRATEGIES,
                 op: str = "spgemm", level: int = 0,
-                records: list | None = None) -> BlockMatrix:
+                records: list | None = None,
+                plan_cache: dict | None = None) -> BlockMatrix:
     """``C = A·B`` with A, B and C row-partitioned.
 
     Overlapped structure: each rank's on-process product ``C_on = A·B_local``
@@ -270,15 +271,29 @@ def dist_spgemm(Ab: BlockMatrix, Bb: BlockMatrix, *,
     ``B_local`` and the halo rows are row-disjoint, so
     ``C_on + C_off == A·(B_local + B_halo)`` with the same sparsity pattern
     (values reassociated within fp round-off).
+
+    ``plan_cache`` (keyed by ``op``) makes the product replayable for
+    streaming value refreshes: on a miss the comm graph is built and the
+    strategy selected as usual, then ``(strategy, plan)`` is stored; on a
+    hit both are reused verbatim — no comm-graph rebuild, no model
+    re-selection — which is sound exactly when the operand sparsity
+    patterns are frozen (the plan is a pure function of them).
     """
-    g = matrix_comm_graph(Ab, Bb, Ab.part, b_part=Bb.part)
-    if strategy == "auto":
-        sel = select(g, params, strategies)
-        strat, times = sel.strategy, dict(sel.times)
-        plan = MatrixHaloPlan(strat, g, sel.schedule)
+    cached = plan_cache.get(op) if plan_cache is not None else None
+    if cached is not None:
+        strat, plan = cached
+        times = {}
     else:
-        strat, times = strategy, {}
-        plan = build_matrix_halo_plan(g, strat)
+        g = matrix_comm_graph(Ab, Bb, Ab.part, b_part=Bb.part)
+        if strategy == "auto":
+            sel = select(g, params, strategies)
+            strat, times = sel.strategy, dict(sel.times)
+            plan = MatrixHaloPlan(strat, g, sel.schedule)
+        else:
+            strat, times = strategy, {}
+            plan = build_matrix_halo_plan(g, strat)
+        if plan_cache is not None:
+            plan_cache[op] = (strat, plan)
 
     def get_row(rank: int, i: int):
         blk = Bb.blocks[rank]
@@ -412,6 +427,12 @@ class PartitionedLevel:
     R: BlockMatrix | None = None
     AP: BlockMatrix | None = None
     setup_seconds: float = 0.0
+    # NAP schedules of this level's Galerkin row exchanges, keyed by op
+    # ("spgemm_AP"/"spgemm_PtAP" → (strategy, MatrixHaloPlan)) — retained
+    # so streaming value refreshes replay the products through the
+    # already-selected schedules without rebuilding any comm graph
+    plans: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
 
 
 def dist_setup_partitioned(
@@ -495,10 +516,12 @@ def dist_setup_partitioned(
         # -- Galerkin triple product: the two NAP matrix-row exchanges
         APb = dist_spgemm(Ab, Pb, params=params, strategy=strategy,
                           strategies=strategies, op="spgemm_AP",
-                          level=l, records=records)
+                          level=l, records=records,
+                          plan_cache=plevels[l].plans)
         Acb = dist_spgemm(Rb, APb, params=params, strategy=strategy,
                           strategies=strategies, op="spgemm_PtAP",
-                          level=l, records=records)
+                          level=l, records=records,
+                          plan_cache=plevels[l].plans)
         Acb = BlockMatrix([blk.prune(1e-14) for blk in Acb.blocks], cpart)
         plevels[l].P, plevels[l].R, plevels[l].AP = Pb, Rb, APb
         plevels[l].setup_seconds = time.perf_counter() - t0
@@ -507,6 +530,42 @@ def dist_setup_partitioned(
         # coarse grid strictly shrinks — no host-style no-progress pop
         l += 1
     return plevels, records
+
+
+def refresh_partitioned_values(
+        plevels: list[PartitionedLevel], A_new: CSR, *,
+        records: list | None = None) -> None:
+    """Value-only refresh of a born-partitioned hierarchy onto ``A_new``.
+
+    The caller guarantees ``A_new`` shares the fine level's sparsity
+    pattern.  Everything structural is frozen — splittings, interpolation
+    operators (values included), comm graphs and the per-level NAP
+    schedules cached in :attr:`PartitionedLevel.plans` — and only the
+    Galerkin products are replayed numerically: the row exchanges run
+    through the already-selected :class:`MatrixHaloPlan` s, and each
+    coarse product is projected onto the next level's frozen (pruned)
+    pattern so every downstream lowering stays valid.
+    """
+    from .hierarchy import project_pattern_values
+
+    fine = plevels[0].A
+    new_blocks = split_rows(A_new, fine.part)
+    for old, new in zip(fine.blocks, new_blocks.blocks):
+        if old.data.shape != new.data.shape:
+            raise ValueError(f"value refresh needs {old.data.shape[0]} "
+                             f"values per block, got {new.data.shape[0]}")
+        old.data[...] = new.data
+    for l, (plv, nxt) in enumerate(zip(plevels[:-1], plevels[1:])):
+        APb = dist_spgemm(plv.A, plv.P, op="spgemm_AP", level=l,
+                          records=records, plan_cache=plv.plans)
+        Acb = dist_spgemm(plv.R, APb, op="spgemm_PtAP", level=l,
+                          records=records, plan_cache=plv.plans)
+        for old, new in zip(plv.AP.blocks, APb.blocks):
+            old.data[...] = project_pattern_values(
+                new, old.indptr, old.indices, old.nrows, old.ncols)
+        for old, new in zip(nxt.A.blocks, Acb.blocks):
+            old.data[...] = project_pattern_values(
+                new, old.indptr, old.indices, old.nrows, old.ncols)
 
 
 def dist_setup(A: CSR, n_pods: int = 1, lanes: int = 1, *,

@@ -430,6 +430,73 @@ class DistHierarchy:
             })
         return rows
 
+    # ----------------------------------------------------- streaming refresh
+    def refresh_values(self, src_levels) -> None:
+        """Value-only refresh onto the frozen lowered layouts.
+
+        ``src_levels`` are the refreshed source levels (host ``Level`` s or
+        partitioned ``BlockMatrix`` levels — the same two shapes
+        :meth:`_lower_levels` accepts) whose sparsity patterns must match
+        what this hierarchy was lowered from.  Every structural artifact —
+        comm graphs, selected strategies, halo plans, ELL/BCSR column maps,
+        shardings — is reused verbatim; only value planes, diagonals,
+        smoother factors, Chebyshev bounds and the coarse pseudo-inverse
+        are recomputed.  The per-level device dicts are mutated **in
+        place** because every cached ``(progs, run_arrs)`` tuple holds
+        those same dict objects: compiled programs pick up the new
+        operands on their next call without retracing.  Chebyshev programs
+        are the one exception — they bake ``chebyshev_coeffs(rho)`` as
+        trace-time constants, so their cache entries are dropped.
+        """
+        def block_of(M):
+            blocks = getattr(M, "blocks", None)
+            if blocks is not None:
+                return lambda d: blocks[d]
+            return lambda d: M
+
+        D = self.n_pods * self.lanes
+        for lv, dl in zip(src_levels, self.levels):
+            part = dl.A.row_part
+            dl.A.refresh_values(block_of(lv.A))
+            d = lv.A.diagonal()
+            dinv = 1.0 / np.where(d == 0, 1.0, d)
+            dinv_dev = np.zeros((D, part.max_local_size), dtype=np.float64)
+            for q in range(D):
+                lo, hi = part.local_range(q)
+                dinv_dev[q, : hi - lo] = dinv[lo:hi]
+            dl.dinv = dinv_dev
+            if dl.P is not None:
+                dl.P.refresh_values(block_of(lv.P))
+                dl.R.refresh_values(block_of(lv.R))
+                dl.rho = estimate_rho_DinvA(lv.A)
+                dl.local_A = [local_square_block(lv.A, part, q)
+                              for q in range(D)]
+                dl._minv_cache.clear()
+            else:
+                pinv = np.linalg.pinv(lv.A.to_dense())
+                m = part.max_local_size
+                cinv = np.zeros((D, m, D * m), dtype=np.float64)
+                for q in range(D):
+                    lo, hi = part.local_range(q)
+                    for e in range(D):
+                        elo, ehi = part.local_range(e)
+                        cinv[q, : hi - lo, e * m: e * m + ehi - elo] = \
+                            pinv[lo:hi, elo:ehi]
+                dl.coarse_inv = cinv
+        placed = jax.device_put(
+            [self._level_arrays(dl) for dl in self.levels], self._sharding)
+        for old, new in zip(self._arrs, placed):
+            old.update(new)
+        for key, lst in self._arrs_ex.items():
+            for dl, base, a in zip(self.levels, self._arrs, lst):
+                a.update(base)
+                if dl.coarse_inv is None:
+                    for name, kind in self._MINV_ARRS[key[0]]:
+                        mv = dl.smoother_minv(kind, key[1]).astype(self.dtype)
+                        a[name] = jax.device_put(mv, self._sharding)
+        for key in [k for k in self._programs if k[1] == "chebyshev"]:
+            del self._programs[key]
+
     # ----------------------------------------------------------- host layout
     def scatter(self, x: np.ndarray, level: int = 0) -> jnp.ndarray:
         arr = self.levels[level].A.scatter_x(np.asarray(x), dtype=self.dtype)

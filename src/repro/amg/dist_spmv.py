@@ -202,6 +202,36 @@ class DistOperator:
             self.on_cols, self.on_vals, self.plan.local_n)
         self.block_size = int(block_size)
 
+    def refresh_values(self, block_of) -> None:
+        """Value-only re-lowering onto the frozen layouts.
+
+        ``block_of(d)`` returns the CSR device ``d`` reads its rows from —
+        same contract as the build — whose sparsity pattern must match the
+        one this operator was lowered from.  The ELL fill order is a pure
+        function of ``indptr``/``indices`` (see :func:`_ell_block`), so with
+        a frozen pattern the column maps, halo plan and on/off split
+        layouts are all reproduced exactly; only the value planes change.
+        BCSR lowerings are re-tiled at the same ``block_size``.
+        """
+        vals = np.zeros(self.ell_cols.shape, dtype=np.float64)
+        for d in range(self.n_devices):
+            rlo, rhi = self.row_part.local_range(d)
+            sub = block_of(d).submatrix_rows(rlo, rhi)
+            if sub.nnz:
+                lens = np.diff(sub.indptr)
+                rows = np.repeat(np.arange(sub.nrows, dtype=np.int64), lens)
+                k = np.arange(sub.nnz, dtype=np.int64) \
+                    - np.repeat(sub.indptr[:-1], lens)
+                vals[d][rows, k] = sub.data
+        self.ell_vals = vals.astype(self.ell_vals.dtype)
+        (on_cols, on_vals), (off_cols, off_vals) = _split_ell_stacked(
+            self.ell_cols, self.ell_vals, self.plan.local_n)
+        # the split is deterministic given cols: layouts come back identical
+        self.on_cols, self.on_vals = on_cols, on_vals
+        self.off_cols, self.off_vals = off_cols, off_vals
+        if self.block_size:
+            self.lower_bcsr(self.block_size)
+
     @staticmethod
     def _ell_product(cols, vals, src, use_kernel, interpret):
         """ELL contraction of one split part against ``src`` ([n(,k)])."""

@@ -121,6 +121,62 @@ def coarsen_level(A: CSR, solver: str = "rs", theta: float = 0.25,
     return interpolation_stage(A, S, split, solver, prolongation_sweeps)
 
 
+def project_pattern_values(src: CSR, indptr: np.ndarray,
+                           indices: np.ndarray, nrows: int,
+                           ncols: int) -> np.ndarray:
+    """Values of ``src`` gathered at a frozen CSR pattern's positions.
+
+    Entries of the frozen pattern absent from ``src`` read as zero;
+    entries of ``src`` outside the pattern are dropped — they are exactly
+    the positions ``prune`` removed when the pattern froze, so a
+    refreshed Galerkin product lands on the layouts every downstream
+    plan/kernel was built for."""
+    ncols = int(ncols)
+    skey = src.rows_expanded().astype(np.int64) * ncols \
+        + src.indices.astype(np.int64)
+    order = np.argsort(skey, kind="stable")
+    skey = skey[order]
+    drows = np.repeat(np.arange(int(nrows), dtype=np.int64),
+                      np.diff(indptr).astype(np.int64))
+    dkey = drows * ncols + indices.astype(np.int64)
+    pos = np.searchsorted(skey, dkey)
+    pos_c = np.minimum(pos, max(skey.size - 1, 0))
+    hit = skey[pos_c] == dkey if skey.size else np.zeros(dkey.shape, bool)
+    vals = np.zeros(dkey.shape)
+    vals[hit] = src.data[order][pos_c[hit]]
+    return vals
+
+
+def refresh_values(h: Hierarchy, A_new: CSR) -> None:
+    """Value-only refresh: re-run the Galerkin products numerically onto
+    the frozen level patterns, leaving every structure — splittings,
+    interpolation operators, patterns, and the lowered ``dist_cache``
+    hierarchies with their compiled programs — untouched.
+
+    The caller is responsible for having checked that ``A_new`` shares
+    the fine level's sparsity pattern (``pattern_fingerprint``)."""
+    fine = h.levels[0].A
+    if A_new.data.shape != fine.data.shape:
+        raise ValueError(f"value refresh needs {fine.data.shape[0]} values, "
+                         f"got {A_new.data.shape[0]}")
+    # copy-on-write: the fine level usually aliases the caller's matrix
+    # (setup never copies), so a refresh must re-point it rather than write
+    # through the alias and silently mutate user-owned arrays
+    h.levels[0].A = CSR(fine.shape, fine.indptr, fine.indices,
+                        np.array(A_new.data, dtype=np.float64))
+    for lv, nxt in zip(h.levels[:-1], h.levels[1:]):
+        lv.smoother_cache.clear()
+        AP = lv.A.spgemm(lv.P)               # P/R frozen: values and pattern
+        Ac = lv.R.spgemm(AP)
+        lv.AP.data[...] = project_pattern_values(
+            AP, lv.AP.indptr, lv.AP.indices, lv.AP.nrows, lv.AP.ncols)
+        nxt.A.data[...] = project_pattern_values(
+            Ac, nxt.A.indptr, nxt.A.indices, nxt.A.nrows, nxt.A.ncols)
+    h.levels[-1].smoother_cache.clear()
+    for dh in h.dist_cache.values():
+        dh.refresh_values(h.levels)
+
+
 def setup(A: CSR, solver: str = "rs", theta: float = 0.25,
           max_coarse: int = 100, max_levels: int = 25,
           aggressive: bool = False, prolongation_sweeps: int = 1,

@@ -272,6 +272,13 @@ def _bound(h: Hierarchy, backend: str, dist, opts):
     return bind_hierarchy(h, backend=backend, dist=dist, opts=opts)
 
 
+def _request(method: str, tol, maxiter, x0):
+    # all three call surfaces (these wrappers, AMGService.submit, wire
+    # requests) funnel per-request knobs through one RequestOptions
+    from .api.config import RequestOptions
+    return RequestOptions(method=method, tol=tol, maxiter=maxiter, x0=x0)
+
+
 def vcycle(h: Hierarchy, b: np.ndarray, x: np.ndarray | None = None,
            opts: SolveOptions | None = None, level: int = 0,
            backend: str = "host", dist=None) -> np.ndarray:
@@ -291,8 +298,8 @@ def solve(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 100,
     ``b`` may be ``[n]`` (→ :class:`SolveResult`) or ``[n, k]``
     (→ :class:`MultiSolveResult`, the k systems solved together).
     """
-    return _bound(h, backend, dist, opts).solve(b, tol=tol, maxiter=maxiter,
-                                                x0=x0)
+    return _bound(h, backend, dist, opts).run(
+        b, _request("solve", tol, maxiter, x0))
 
 
 def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
@@ -300,5 +307,5 @@ def pcg(h: Hierarchy, b: np.ndarray, tol: float = 1e-8, maxiter: int = 200,
         backend: str = "host", dist=None):
     """AMG-preconditioned conjugate gradients (``x0=`` warm start supported
     on every backend; ``b`` may be ``[n]`` or ``[n, k]``)."""
-    return _bound(h, backend, dist, opts).pcg(b, tol=tol, maxiter=maxiter,
-                                              x0=x0)
+    return _bound(h, backend, dist, opts).run(
+        b, _request("pcg", tol, maxiter, x0))

@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from ..amg.api import WIRE_SCHEMA, array_from_wire
+from ..amg.api import SUPPORTED_SCHEMAS, WIRE_SCHEMA, array_from_wire
 from .wire import MAX_FRAME_BYTES, _HEADER
 
 
@@ -56,6 +56,8 @@ class AMGWireClient:
         self._orphans: list[dict] = []
         self._orphans_ready = threading.Event()
         self._closed = False
+        self.hello: dict | None = None   # the server's greeting, once seen
+        self.schema = WIRE_SCHEMA        # negotiated down on connect()
         self._reader = threading.Thread(target=self._read_loop,
                                         name="amg-wire-client", daemon=True)
         self._reader.start()
@@ -63,9 +65,32 @@ class AMGWireClient:
     @classmethod
     def connect(cls, host: str, port: int,
                 timeout: float = 60.0) -> "AMGWireClient":
+        """Connect and negotiate: the server greets with a ``hello`` frame
+        advertising its ``supported_schemas``; the client speaks the
+        highest version both sides know.  A server that never says hello
+        (a pre-v2 server) leaves the client at its own default."""
         sock = socket.create_connection((host, port), timeout=timeout)
         sock.settimeout(None)
-        return cls(sock)
+        client = cls(sock)
+        try:
+            frame = client.recv_unmatched(timeout=min(timeout, 5.0))
+        except TimeoutError:
+            return client
+        if frame.get("kind") != "hello":     # not a greeting: put it back
+            with client._slock:
+                client._orphans.insert(0, frame)
+                client._orphans_ready.set()
+            return client
+        client.hello = frame
+        offered = frame.get("supported_schemas") or [WIRE_SCHEMA]
+        common = [s for s in offered if s in SUPPORTED_SCHEMAS]
+        if not common:
+            client.close()
+            raise RuntimeError(
+                f"no common wire schema: server speaks {offered}, "
+                f"client speaks {list(SUPPORTED_SCHEMAS)}")
+        client.schema = max(common)
+        return client
 
     # ----------------------------------------------------------- raw framing
     def send(self, kind: str, *, tenant: str | None = None,
@@ -76,7 +101,7 @@ class AMGWireClient:
             seq = self._next_seq
             self._next_seq += 1
             self._waiting[seq] = _Slot()
-        frame = {"schema": WIRE_SCHEMA, "kind": kind, "seq": seq, **extra}
+        frame = {"schema": self.schema, "kind": kind, "seq": seq, **extra}
         if tenant is not None:
             frame["tenant"] = tenant
         if payload is not None:
@@ -142,6 +167,16 @@ class AMGWireClient:
                                     payload=payload), timeout)
         frame = self._typed(frame, "solution")
         return array_from_wire(frame["x"]), frame.get("diagnostics") or {}
+
+    def update(self, tenant: str, payload: dict,
+               timeout: float | None = 60.0) -> dict:
+        """Stream a value update (``update_request_to_wire`` payload) into
+        a tenant's live session; returns the ``updated`` frame (``action``
+        is ``"refresh"`` or ``"resetup"``, ``reason`` the trigger).
+        Raises :class:`RemoteError` — 404 for an unregistered matrix."""
+        frame = self.recv(self.send("update", tenant=tenant,
+                                    payload=payload), timeout)
+        return self._typed(frame, "updated")
 
     def stats(self, tenant: str | None = None,
               timeout: float | None = 60.0) -> dict:

@@ -23,7 +23,10 @@ Connections are plain asyncio streams speaking the length-prefixed JSON
 frames of :mod:`repro.serve.wire`; the *content* of every frame is the
 existing versioned codec (``csr_to_wire`` payloads register matrices by
 verified content fingerprint, ``solve_request_to_wire`` payloads admit
-solves).  Every decode failure — malformed JSON, schema-version mismatch,
+solves, ``update_request_to_wire`` payloads stream ``A + ΔA`` value drift
+into a tenant's live sessions — schema-v2 frames; the connection opens
+with a ``hello`` frame advertising the schemas the server accepts).
+Every decode failure — malformed JSON, schema-version mismatch,
 unknown key, unknown matrix id — becomes a structured ``error`` frame and
 the connection survives; the server process never dies on a bad payload.
 
@@ -46,7 +49,7 @@ from ..amg.api.config import array_to_wire, csr_from_wire
 from ..amg.api.service import AMGService, PRIORITY_CLASSES, ServiceClosed
 from ..amg.api.sessions import LRUPolicy, SessionStore, _csr_nbytes
 from .wire import (MAX_FRAME_BYTES, check_request_envelope, encode_frame,
-                   error_frame, read_frame, response_frame)
+                   error_frame, hello_frame, read_frame, response_frame)
 
 # fraction of a tenant's max_inflight each priority class may fill before
 # admission sheds it: batch loses half the queue to interactive headroom
@@ -110,7 +113,7 @@ class _Tenant:
         self.inflight = 0              # touched only on the event loop
         self.registered_bytes = 0
         self.counters = {"registered": 0, "admitted": 0, "completed": 0,
-                         "rejected": 0, "errors": 0}
+                         "updated": 0, "rejected": 0, "errors": 0}
         self.rejected_by_class: dict[str, int] = {}
 
     def admit_limit(self, prio: int) -> int:
@@ -187,6 +190,9 @@ class AMGWireServer:
         self.connections += 1
         lock = asyncio.Lock()          # serializes interleaved responses
         try:
+            # unsolicited greeting: advertise the schema versions this
+            # server accepts so the client can negotiate before sending
+            await self._send(writer, lock, hello_frame(self.tenants))
             while True:
                 try:
                     frame = await read_frame(reader, self.max_frame)
@@ -254,6 +260,8 @@ class AMGWireServer:
         try:
             if kind == "register":
                 await self._register(tenant, payload, seq, writer, lock)
+            elif kind == "update":
+                await self._update(tenant, payload, seq, writer, lock)
             else:
                 await self._solve(tenant, payload, seq, writer, lock)
         except WireError as e:              # strict codec rejection
@@ -288,6 +296,17 @@ class AMGWireServer:
         tenant.counters["registered"] += 1
         await self._send(writer, lock, response_frame(
             "registered", seq, matrix=fp, bytes=nbytes))
+
+    async def _update(self, tenant: _Tenant, payload, seq,
+                      writer, lock) -> None:
+        # the refresh/re-setup is synchronous compute — run it off the
+        # event loop so concurrent connections keep being served (a KeyError
+        # for an unregistered fingerprint maps to a 404 error frame in
+        # _dispatch, exactly like an unknown matrix id on the solve path)
+        result = await asyncio.to_thread(tenant.service.update_wire, payload)
+        tenant.counters["updated"] += 1
+        await self._send(writer, lock, response_frame("updated", seq,
+                                                      **result))
 
     async def _solve(self, tenant: _Tenant, payload, seq,
                      writer, lock) -> None:

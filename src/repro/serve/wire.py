@@ -5,34 +5,44 @@ bytes of UTF-8 JSON.  The framing is the transport half of the serving
 story; the *content* of every frame is the existing versioned wire codec
 (:mod:`repro.amg.api.config`) wrapped in a small server envelope:
 
-Client → server frames::
+Client → server frames (``schema`` may be any version the server
+supports — v1 frames still decode on a v2 server)::
 
-    {"schema": 1, "kind": "register", "tenant": T, "seq": n,
+    {"schema": 2, "kind": "register", "tenant": T, "seq": n,
      "payload": csr_to_wire(A)}
-    {"schema": 1, "kind": "solve",    "tenant": T, "seq": n,
+    {"schema": 2, "kind": "solve",    "tenant": T, "seq": n,
      "payload": solve_request_to_wire(...)}
-    {"schema": 1, "kind": "stats",    "tenant": T?, "seq": n}
-    {"schema": 1, "kind": "ping",     "seq": n}
+    {"schema": 2, "kind": "update",   "tenant": T, "seq": n,   # schema ≥ 2
+     "payload": update_request_to_wire(...)}
+    {"schema": 2, "kind": "stats",    "tenant": T?, "seq": n}
+    {"schema": 2, "kind": "ping",     "seq": n}
 
 Server → client frames::
 
-    {"schema": 1, "kind": "registered", "seq": n, "matrix": fp,
+    {"schema": 2, "kind": "hello",      "seq": null,           # on connect
+     "supported_schemas": [1, 2], "tenants": [...]}
+    {"schema": 2, "kind": "registered", "seq": n, "matrix": fp,
      "bytes": nb}
-    {"schema": 1, "kind": "solution",   "seq": n, "x": array_to_wire(x),
+    {"schema": 2, "kind": "solution",   "seq": n, "x": array_to_wire(x),
      "diagnostics": {...}}
-    {"schema": 1, "kind": "rejected",   "seq": n, "code": 429,
+    {"schema": 2, "kind": "updated",    "seq": n, "matrix": id,
+     "action": "refresh"|"resetup", "reason": ...}
+    {"schema": 2, "kind": "rejected",   "seq": n, "code": 429,
      "reason": ..., ...}       # admission backpressure, NEVER a dropped
                                # connection
-    {"schema": 1, "kind": "error",      "seq": n?, "code": 4xx/5xx,
+    {"schema": 2, "kind": "error",      "seq": n?, "code": 4xx/5xx,
      "error": ExcName, "message": ...}
-    {"schema": 1, "kind": "stats",      "seq": n, "tenants": {...}}
-    {"schema": 1, "kind": "pong",       "seq": n}
+    {"schema": 2, "kind": "stats",      "seq": n, "tenants": {...}}
+    {"schema": 2, "kind": "pong",       "seq": n}
 
 ``seq`` is a client-chosen correlation id: solves complete out of order,
-so responses echo it.  Decode failures never desynchronize the stream —
-an oversized body is drained and a too-large/undecodable frame surfaces
-as a typed :class:`WireError` subclass the server turns into a structured
-``error`` frame while the connection stays up.
+so responses echo it.  The unsolicited ``hello`` frame (``seq: null``)
+advertises the schema versions the server accepts so a client can
+negotiate down (or refuse) before sending anything.  Decode failures
+never desynchronize the stream — an oversized body is drained and a
+too-large/undecodable frame surfaces as a typed :class:`WireError`
+subclass the server turns into a structured ``error`` frame while the
+connection stays up.
 """
 from __future__ import annotations
 
@@ -40,14 +50,17 @@ import asyncio
 import json
 import struct
 
-from ..amg.api.config import WIRE_SCHEMA, WireError
+from ..amg.api.config import SUPPORTED_SCHEMAS, WIRE_SCHEMA, WireError
 
 MAX_FRAME_BYTES = 1 << 26        # 64 MiB: far beyond any smoke matrix
 _HEADER = struct.Struct(">I")
 
-REQUEST_KINDS = ("register", "solve", "stats", "ping")
-RESPONSE_KINDS = ("registered", "solution", "rejected", "error", "stats",
-                  "pong")
+REQUEST_KINDS = ("register", "solve", "update", "stats", "ping")
+RESPONSE_KINDS = ("hello", "registered", "solution", "updated", "rejected",
+                  "error", "stats", "pong")
+# frame kinds that did not exist in a given schema version: a frame
+# claiming an older schema must not smuggle in newer kinds
+_KIND_MIN_SCHEMA = {"update": 2}
 
 
 class FrameTooLarge(WireError):
@@ -105,18 +118,34 @@ async def read_frame(reader: asyncio.StreamReader,
 
 def check_request_envelope(frame: dict) -> str:
     """Validate a client frame's ``schema``/``kind``; returns the kind.
-    Raises :class:`WireError` on version mismatch or unknown kind (the
-    server answers with a structured error frame, exactly like the inner
-    codec's strict decoders)."""
+    Any supported schema version is accepted (a v1 client keeps working
+    against a v2 server), but a kind introduced by a later version is
+    rejected when the frame claims an older schema.  Raises
+    :class:`WireError` on version mismatch or unknown kind (the server
+    answers with a structured error frame, exactly like the inner codec's
+    strict decoders)."""
     schema = frame.get("schema")
-    if schema != WIRE_SCHEMA:
+    if schema not in SUPPORTED_SCHEMAS:
         raise WireError(f"wire schema version mismatch: frame has "
-                        f"{schema!r}, this server speaks {WIRE_SCHEMA}")
+                        f"{schema!r}, this server speaks "
+                        f"{list(SUPPORTED_SCHEMAS)}")
     kind = frame.get("kind")
     if kind not in REQUEST_KINDS:
         raise WireError(f"unknown frame kind {kind!r}; "
                         f"known: {list(REQUEST_KINDS)}")
+    if schema < _KIND_MIN_SCHEMA.get(kind, 1):
+        raise WireError(f"frame kind {kind!r} needs schema >= "
+                        f"{_KIND_MIN_SCHEMA[kind]}, frame has {schema}")
     return kind
+
+
+def hello_frame(tenants) -> dict:
+    """The unsolicited server greeting: advertises the schema versions the
+    server accepts (clients negotiate on ``supported_schemas``) and the
+    tenant names it hosts."""
+    return response_frame("hello", None,
+                          supported_schemas=list(SUPPORTED_SCHEMAS),
+                          tenants=sorted(tenants))
 
 
 def response_frame(kind: str, seq, **fields) -> dict:

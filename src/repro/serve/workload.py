@@ -16,7 +16,8 @@ import json
 
 import numpy as np
 
-from ..amg.api import csr_to_wire, matrix_fingerprint, solve_request_to_wire
+from ..amg.api import (csr_to_wire, matrix_fingerprint,
+                       solve_request_to_wire, update_request_to_wire)
 from ..amg.problems import laplace_3d
 
 
@@ -64,6 +65,26 @@ def make_request(rng: np.random.Generator, problems: dict, mid: str, *,
     payload = json_hop(solve_request_to_wire(
         mid, b, method=method, rid=rid, priority=priority))
     return b, payload
+
+
+def make_update(rng: np.random.Generator, problems: dict, mid: str, *,
+                scale: float = 1e-3, rid: int | None = None) -> dict:
+    """One streaming value update against ``mid``: a small random additive
+    ΔA on the frozen sparsity pattern (symmetrized so pcg's SPD assumption
+    survives the drift) as an encoded (JSON round-tripped)
+    ``update_request`` payload.  Mutates ``problems[mid]`` to the drifted
+    matrix so later residual validation uses the operator the server is
+    actually solving with."""
+    A = problems[mid]
+    delta = scale * np.abs(A.data) * rng.standard_normal(A.nnz)
+    # the Laplacian pattern is symmetric, so transposing the delta on the
+    # frozen pattern and averaging keeps the drifted operator symmetric
+    delta = 0.5 * (delta + A.__class__(A.shape, A.indptr, A.indices,
+                                       delta).T.data)
+    payload = json_hop(update_request_to_wire(mid, delta=delta, rid=rid))
+    problems[mid] = A.__class__(A.shape, A.indptr, A.indices,
+                                A.data + delta)
+    return payload
 
 
 def rel_residual(A, x: np.ndarray, b: np.ndarray) -> float:

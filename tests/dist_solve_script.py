@@ -266,6 +266,43 @@ def main():
     DistHierarchy.build = classmethod(orig_build)
     print("OK multi_rhs")
 
+    # streaming refresh on the fp64 2x4 mesh: bound.update(A2) keeps the
+    # SAME lowered DistHierarchy (comm graphs, NAP selections, compiled
+    # programs) while the refreshed PCG matches a fresh setup(A2) session
+    # ≤1e-7; an injected convergence regression then triggers exactly one
+    # adaptive re-setup
+    from repro.amg.api import LRUPolicy, SessionStore
+
+    store_s = SessionStore(LRUPolicy())
+    cfg_s = AMGConfig(backend="dist", n_pods=N_PODS, lanes=LANES,
+                      machine="blue_waters", dtype="float64", tol=1e-9)
+    bound_s = AMGSolver(cfg_s, store=store_s).setup(A)
+    base_its = bound_s.pcg(b).iterations
+    dh_before = bound_s.dist_hierarchy
+    progs_before = dict(bound_s.dist_hierarchy._programs)
+    rng_s = np.random.default_rng(13)
+    d2 = A.data * (1.0 + 0.02 * rng_s.random(A.nnz))
+    At = CSR(A.shape, A.indptr.copy(), A.indices.copy(), d2).T
+    A2 = CSR(A.shape, A.indptr.copy(), A.indices.copy(),
+             0.5 * (d2 + At.data))
+    assert bound_s.update(A2) == "refresh"
+    assert bound_s.dist_hierarchy is dh_before
+    assert all(bound_s.dist_hierarchy._programs.get(k) is v
+               for k, v in progs_before.items())   # programs reused verbatim
+    x_r = np.asarray(bound_s.pcg(b).x)
+    clear_sessions()
+    x_f = np.asarray(AMGSolver(cfg_s).setup(A2).pcg(b).x)
+    rd = np.abs(x_r - x_f).max() / max(np.abs(x_f).max(), 1e-30)
+    assert rd < 1e-7, rd
+    assert A.data is not A2.data and bound_s._fine is not A2  # copy-on-write
+    bound_s.last_iterations = 10 * base_its + 100  # inject a regression
+    assert bound_s.update(A2) == "resetup"
+    st_s = store_s.stats()
+    assert st_s["resetups"] == 1 and st_s["refreshes"] == 1, st_s
+    assert st_s["triggers"] == {"drift": 1, "regression": 1}, st_s
+    assert bound_s.pcg(b).converged
+    print("OK streaming_refresh")
+
     print("ALL_OK")
 
 

@@ -1,6 +1,6 @@
 """Session API tests: AMGConfig hashability/round-trip, the backend
 registry, session caching, build-once dist solving, multi-RHS parity, pcg
-x0 symmetry, and the SolverEngine serving surface.
+x0 symmetry, and the AMGService synchronous drain surface.
 
 Multi-device fp64 multi-RHS parity runs in the dist_solve subprocess script
 (`dist_solve_script.py`); everything here stays on this process's single
@@ -11,9 +11,9 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.amg import (AMGConfig, AMGSolver, MultiSolveResult, SolveOptions,
-                      SolveRequest, SolverEngine, available_backends, pcg,
-                      setup, solve, vcycle)
+from repro.amg import (AMGConfig, AMGService, AMGSolver, MultiSolveResult,
+                      SolveOptions, available_backends, pcg, setup, solve,
+                      vcycle)
 from repro.amg.api import clear_sessions, matrix_fingerprint, session_count
 from repro.amg.problems import laplace_3d
 
@@ -236,46 +236,43 @@ def test_pcg_x0_symmetry(problem):
                dist={"n_pods": 1, "lanes": 1, "strategy": "standard"})
 
 
-# ------------------------------------------------------------ SolverEngine
-def test_solver_engine_smoke():
+# ------------------------------------------------------- AMGService drain
+def test_service_drain_smoke():
     A1, A2 = laplace_3d(6), laplace_3d(8)
-    eng = SolverEngine(AMGConfig(tol=1e-8), max_rhs=3)
-    eng.add_matrix("m1", A1)
-    eng.add_matrix("m2", A2)
+    svc = AMGService(AMGConfig(tol=1e-8), max_rhs=3)
+    svc.register("m1", A1)
+    svc.register("m2", A2)
     rng = np.random.default_rng(0)
     reqs = []
     for rid in range(7):
         mid = "m1" if rid % 2 == 0 else "m2"
         A = A1 if mid == "m1" else A2
-        reqs.append(SolveRequest(rid=rid, matrix_id=mid,
-                                 b=rng.standard_normal(A.nrows)))
-        eng.submit(reqs[-1])
-    out = eng.run()
+        reqs.append((rid, mid, rng.standard_normal(A.nrows)))
+        svc.submit(mid, reqs[-1][2], rid=rid)
+    out = svc.drain()
     assert sorted(out) == list(range(7))
-    for req in reqs:
-        A = A1 if req.matrix_id == "m1" else A2
-        rel = (np.linalg.norm(req.b - A.matvec(out[req.rid]))
-               / np.linalg.norm(req.b))
-        assert rel < 1e-6, (req.rid, rel)
+    for rid, mid, b in reqs:
+        A = A1 if mid == "m1" else A2
+        rel = np.linalg.norm(b - A.matvec(out[rid])) / np.linalg.norm(b)
+        assert rel < 1e-6, (rid, rel)
     # convergence is surfaced per request, not silently discarded
-    assert sorted(eng.diagnostics) == list(range(7))
+    assert sorted(svc.diagnostics) == list(range(7))
     assert all(d["converged"] and d["iterations"] > 0
-               for d in eng.diagnostics.values())
-    assert eng.stats["unconverged"] == 0
+               for d in svc.diagnostics.values())
+    assert svc.stats["unconverged"] == 0
     # 4 m1-requests and 3 m2-requests at max_rhs=3 → 2 + 1 batches
-    assert eng.stats["batches"] == 3
-    assert eng.stats["setups"] == 2
-    assert eng.stats["batched_rhs"] == 6        # 3 + 3 (the 1-request tail
+    assert svc.stats["batches"] == 3
+    assert svc.stats["setups"] == 2
+    assert svc.stats["batched_rhs"] == 6        # 3 + 3 (the 1-request tail
     #                                             of m1 runs unbatched)
     # draining again is a no-op; unknown ids are rejected
-    assert eng.run() == {}
+    assert svc.drain() == {}
     with pytest.raises(KeyError, match="unknown matrix_id"):
-        eng.submit(SolveRequest(rid=99, matrix_id="nope", b=np.ones(3)))
+        svc.submit("nope", np.ones(3))
     with pytest.raises(ValueError, match="unknown method"):
-        eng.submit(SolveRequest(rid=99, matrix_id="m1",
-                                b=np.ones(A1.nrows), method="gmres"))
+        svc.submit("m1", np.ones(A1.nrows), method="gmres")
     with pytest.raises(ValueError, match="must be"):
-        eng.submit(SolveRequest(rid=99, matrix_id="m1", b=np.ones(3)))
-    # same-engine re-setup hits the bound cache, not a new hierarchy
-    assert eng.bound_for("m1") is eng.bound_for("m1")
-    assert eng.stats["setups"] == 2
+        svc.submit("m1", np.ones(3))
+    # same-service re-setup hits the bound cache, not a new hierarchy
+    assert svc.bound_for("m1") is svc.bound_for("m1")
+    assert svc.stats["setups"] == 2

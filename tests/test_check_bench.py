@@ -147,16 +147,49 @@ def test_overlap_cycle_rows_gate_structure_not_magnitude(tmp_path):
     assert run(tmp_path, base, bad_t) == 1
 
 
+STREAMING_DERIVED = ("n=512;mesh=2x4;steps=4;solves=5;refreshes=3;"
+                     "resetups=1;cached=1;max_iters=7;iters=7:7:7:7:7;"
+                     "triggers=drift:3,regression:1;refresh_us=16000.0;"
+                     "resetup_us=38000.0;speedup=2.4")
+
+
 def test_overlap_rows_required_with_cycle_sweep(tmp_path):
-    """A run with the dist-solve cycle sweep but no overlap rows fails."""
+    """A run with the dist-solve cycle sweep but no overlap (or streaming)
+    rows fails."""
     cyc = row("dist_cycle_V_jacobi", "iters=7;conv=0.17;inter_msgs=10")
     ovl = row("dist_overlap_L0",
               "on_nnz=1;off_nnz=1;local_nnz=2;eff_modeled=0.0")
     ovc = row("dist_overlap_cycle_V",
               "serial_us=10.0;overlap_us=9.0;speedup=1.1")
-    assert run(tmp_path, [cyc], [cyc]) == 1              # both missing
+    stm = row("streaming_refresh", STREAMING_DERIVED)
+    assert run(tmp_path, [cyc], [cyc]) == 1              # all missing
     assert run(tmp_path, [cyc], [cyc, ovl]) == 1         # cycle row missing
-    assert run(tmp_path, [cyc], [cyc, ovl, ovc]) == 0
+    assert run(tmp_path, [cyc], [cyc, ovl, ovc]) == 1    # streaming missing
+    assert run(tmp_path, [cyc], [cyc, ovl, ovc, stm]) == 0
+
+
+def test_streaming_rows_gate_refresh_beats_resetup(tmp_path):
+    """streaming_* rows: refresh_us < resetup_us is the one gated timing
+    ordering; counters must balance; iteration counts must stay finite."""
+    good = row("streaming_refresh", STREAMING_DERIVED)
+    assert run(tmp_path, [good], [good]) == 0
+    # a refresh that costs as much as (or more than) the re-setup fails
+    slow = [row("streaming_refresh",
+                STREAMING_DERIVED.replace("refresh_us=16000.0",
+                                          "refresh_us=99000.0"))]
+    assert run(tmp_path, [good], slow) == 1
+    # unbalanced solve accounting fails
+    unbal = [row("streaming_refresh",
+                 STREAMING_DERIVED.replace("cached=1", "cached=3"))]
+    assert run(tmp_path, [good], unbal) == 1
+    # a missing counter field fails
+    short = [row("streaming_refresh",
+                 "refresh_us=1.0;resetup_us=2.0;max_iters=7")]
+    assert run(tmp_path, [good], short) == 1
+    # non-finite iteration trajectory fails
+    nan_it = [row("streaming_refresh",
+                  STREAMING_DERIVED.replace("max_iters=7", "max_iters=nan"))]
+    assert run(tmp_path, [good], nan_it) == 1
 
 
 def test_modeled_us_must_be_finite(tmp_path):

@@ -25,7 +25,7 @@ EXPECTED = [
     "OK solve_nap3", "OK pcg_nap3",
     "OK auto_select", "OK pallas_path", "OK chebyshev",
     "OK cycle_smoother_parity", "OK overlap_parity", "OK empty_halo",
-    "OK dist_setup_cycles", "OK multi_rhs",
+    "OK dist_setup_cycles", "OK multi_rhs", "OK streaming_refresh",
     "ALL_OK",
 ]
 
@@ -191,6 +191,14 @@ def test_benchmark_smoke_mode(tmp_path):
     by_name = {r["name"]: r for r in data["rows"]}
     assert by_name["amg_solver_cached"]["us_per_call"] < \
         by_name["amg_solver_cold"]["us_per_call"]
+    # streaming drift sweep: the value-only refresh must beat the full
+    # re-setup the injected regression triggers, and the solve accounting
+    # must land in the derived string for the check_bench gate
+    assert by_name["streaming_refresh"]["us_per_call"] < \
+        by_name["streaming_resetup"]["us_per_call"]
+    for field in ("solves=", "refreshes=", "resetups=", "cached=",
+                  "max_iters=", "triggers="):
+        assert field in by_name["streaming_refresh"]["derived"]
 
 
 @pytest.mark.slow

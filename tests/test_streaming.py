@@ -1,0 +1,310 @@
+"""Streaming matrix sessions: A + ΔA updates with hierarchy reuse.
+
+The tentpole contract under test: a value-only drift
+(``bound.update(A_new)`` / ``AMGService.update``) refreshes the live
+session in place — frozen splittings, interpolation patterns, NAP
+schedules, compiled programs — and the refreshed solver is numerically
+indistinguishable (≤ 1e-7) from a fresh ``setup(A_new)``.  Escalation is
+exact and observable: a changed sparsity pattern raises the typed
+:class:`PatternMismatch` (404-style over the wire for an unregistered
+id), an injected convergence regression triggers exactly ONE adaptive
+re-setup, an evicted session re-runs the full setup — every path
+accounted in ``SessionStore.stats()`` under its trigger reason.
+
+Multi-device (2×4 mesh, fp64) refresh parity runs in the dist_solve
+subprocess script; everything here stays on a single CPU device.
+"""
+import numpy as np
+import pytest
+
+from repro.amg import (AMGConfig, AMGService, AMGSolver, PatternMismatch,
+                       RefreshPolicy, setup, solve)
+from repro.amg.api import (LRUPolicy, SessionStore, clear_sessions,
+                           csr_to_wire, matrix_fingerprint,
+                           pattern_fingerprint, update_request_to_wire)
+from repro.amg.api.registry import bind_hierarchy
+from repro.amg.csr import CSR
+from repro.amg.hierarchy import refresh_values
+from repro.amg.problems import laplace_3d
+
+
+@pytest.fixture(autouse=True)
+def _fresh_sessions():
+    clear_sessions()
+    yield
+    clear_sessions()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A = laplace_3d(8)
+    rng = np.random.default_rng(7)
+    b = rng.standard_normal(A.nrows)
+    return A, b
+
+
+def _drift(A, scale=0.03, seed=1):
+    """A value-only drift on A's frozen pattern (SPD-safe: scales data)."""
+    rng = np.random.default_rng(seed)
+    data = A.data * (1.0 + scale * rng.random(A.nnz))
+    # resymmetrize so pcg's SPD assumption holds after the perturbation
+    At = CSR(A.shape, A.indptr.copy(), A.indices.copy(), data).T
+    return CSR(A.shape, A.indptr.copy(), A.indices.copy(),
+               0.5 * (data + At.data))
+
+
+# ------------------------------------------------------- hierarchy refresh
+def test_hierarchy_refresh_replays_galerkin_on_frozen_operators(problem):
+    """The refresh contract: coarse values equal R·(A_new·P) computed with
+    the FROZEN interpolation operators, projected onto the frozen coarse
+    patterns (a fresh setup would re-run strength/splitting on the drifted
+    values and may pick different operators — that is the re-setup path,
+    not the refresh path)."""
+    A, _ = problem
+    h = setup(A)
+    frozen_P = [lv.P for lv in h.levels[:-1]]
+    A2 = _drift(A)
+    refresh_values(h, A2)
+    np.testing.assert_array_equal(h.levels[0].A.data, A2.data)
+    Al = A2
+    for lv, nxt, P in zip(h.levels[:-1], h.levels[1:], frozen_P):
+        assert lv.P is P                        # structure untouched
+        Ac = P.T.spgemm(Al.spgemm(P))
+        got = {(int(r), int(c)): v for r, c, v in
+               zip(nxt.A.rows_expanded(), nxt.A.indices, nxt.A.data)}
+        want = {(int(r), int(c)): v for r, c, v in
+                zip(Ac.rows_expanded(), Ac.indices, Ac.data)}
+        for key, v in got.items():
+            assert abs(v - want.get(key, 0.0)) < 1e-12, key
+        Al = nxt.A
+    # the caller's matrix is never written through (copy-on-write)
+    assert h.levels[0].A is not A2
+
+
+def test_uniform_scaling_refresh_matches_fresh_setup(problem):
+    """Uniform scaling preserves strength ratios, so here — and only here
+    — a fresh setup reproduces the refreshed hierarchy exactly."""
+    A, _ = problem
+    h = setup(A)
+    A2 = CSR(A.shape, A.indptr.copy(), A.indices.copy(), 2.5 * A.data)
+    refresh_values(h, A2)
+    fresh = setup(A2)
+    assert h.n_levels == fresh.n_levels
+    for lv, flv in zip(h.levels, fresh.levels):
+        np.testing.assert_array_equal(lv.A.indptr, flv.A.indptr)
+        np.testing.assert_allclose(lv.A.data, flv.A.data,
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_refresh_preserves_caller_matrix(problem):
+    A, _ = problem
+    before = A.data.copy()
+    bound = AMGSolver(AMGConfig(tol=1e-10)).setup(A)
+    bound.update(_drift(A))
+    np.testing.assert_array_equal(A.data, before)
+
+
+# -------------------------------------------------------- session updates
+def test_refresh_parity_vs_fresh_setup(problem):
+    A, b = problem
+    cfg = AMGConfig(tol=1e-10)
+    bound = AMGSolver(cfg).setup(A)
+    bound.pcg(b)
+    A2 = _drift(A)
+    h_before = bound.hierarchy
+    assert bound.update(A2) == "refresh"
+    assert bound.hierarchy is h_before          # structure reused
+    x_ref = np.asarray(bound.pcg(b).x)
+    clear_sessions()
+    x_fresh = np.asarray(AMGSolver(cfg).setup(A2).pcg(b).x)
+    assert np.max(np.abs(x_ref - x_fresh)) <= 1e-7
+    # the refreshed session answers for A2's fingerprint now: a fresh
+    # setup(A2) under an equal config is a cache hit, not a rebuild
+    clear_sessions()
+    cfg2 = AMGConfig(tol=1e-10)
+    s = AMGSolver(cfg2)
+    bound2 = s.setup(A)
+    bound2.update(A2)
+    assert s.setup(A2) is bound2
+
+
+def test_pattern_mismatch_is_typed_and_refuses_refresh(problem):
+    A, _ = problem
+    bound = AMGSolver(AMGConfig()).setup(A)
+    A_diag = A.prune(2.0)                       # off-diagonals dropped
+    assert pattern_fingerprint(A_diag) != bound.pattern_fp
+    with pytest.raises(PatternMismatch):
+        bound.update(A_diag)
+    assert isinstance(PatternMismatch("x"), ValueError)
+    # wrong value count through the data= form is the same typed error
+    with pytest.raises(PatternMismatch):
+        bound.update(data=np.ones(3))
+
+
+def test_injected_regression_triggers_exactly_one_resetup(problem):
+    A, b = problem
+    store = SessionStore(LRUPolicy())
+    cfg = AMGConfig(tol=1e-10,
+                    refresh=RefreshPolicy(regress_ratio=1.5, regress_slack=2))
+    solver = AMGSolver(cfg, store=store)
+    bound = solver.setup(A)
+    base = bound.pcg(b).iterations
+    assert bound.baseline_iterations == base
+    # drift within policy: refresh
+    assert bound.update(_drift(A, seed=2)) == "refresh"
+    assert bound.baseline_iterations == base    # baseline survives refresh
+    # inject a regression past ratio*baseline + slack
+    bound.last_iterations = int(1.5 * base + 3)
+    assert bound.update(_drift(A, seed=3)) == "resetup"
+    assert bound.baseline_iterations is None    # re-baselined after resetup
+    st = store.stats()
+    assert st["resetups"] == 1 and st["refreshes"] == 1
+    assert st["triggers"] == {"drift": 1, "regression": 1}
+    # the very next drift refreshes again — exactly one re-setup fired
+    assert bound.update(_drift(A, seed=4)) == "refresh"
+    assert store.stats()["resetups"] == 1
+
+
+def test_refresh_policy_thresholds():
+    pol = RefreshPolicy(regress_ratio=2.0, regress_slack=1)
+    assert not pol.regressed(None, 50)          # no baseline yet
+    assert not pol.regressed(10, 21)            # 21 <= 2*10 + 1
+    assert pol.regressed(10, 22)
+    cfg = AMGConfig(refresh=pol)
+    assert isinstance(hash(cfg), int)           # stays hashable
+
+
+def test_update_needs_a_streaming_session(problem):
+    A, _ = problem
+    bound = bind_hierarchy(setup(A))            # bare hierarchy, no session
+    with pytest.raises(ValueError, match="streaming updates"):
+        bound.update(_drift(A))
+
+
+# -------------------------------------------------------- service routing
+def test_service_update_keeps_matrix_id_stable(problem):
+    A, b = problem
+    svc = AMGService(AMGConfig(tol=1e-10))
+    svc.register("m", A)
+    t0 = svc.submit("m", b, method="pcg")
+    svc.drain()
+    A2 = _drift(A)
+    out = svc.update("m", A2)
+    assert out == {"matrix": "m", "action": "refresh", "reason": "drift"}
+    # same id now solves against the drifted operator
+    t1 = svc.submit("m", b, method="pcg")
+    x = svc.drain()[t1.rid]
+    res = np.linalg.norm(b - A2.matvec(x)) / np.linalg.norm(b)
+    assert res < 1e-8
+    assert t0.done() and svc.stats["updates"] == 1
+    # counter consistency: every solve after an update is a session hit
+    st = svc.store.stats()
+    assert st["refreshes"] == 1 and st["resetups"] == 0
+
+
+def test_service_update_escalates_on_pattern_change(problem):
+    A, _ = problem
+    svc = AMGService(AMGConfig())
+    svc.register("m", A)
+    svc.bound_for("m")
+    A_diag = A.prune(2.0)
+    out = svc.update("m", A_diag)
+    assert out["action"] == "resetup" and out["reason"] == "pattern"
+    # the registry now serves the new matrix under the same id
+    got, fp = svc._lookup_matrix("m")
+    assert fp == matrix_fingerprint(A_diag)
+    assert svc.store.stats()["triggers"]["pattern"] == 1
+
+
+def test_update_after_eviction_runs_full_setup(problem):
+    A, b = problem
+    store = SessionStore(LRUPolicy(1))          # room for ONE session
+    svc = AMGService(AMGConfig(tol=1e-10), store=store)
+    svc.register("m", A)
+    svc.register("other", laplace_3d(6))
+    svc.bound_for("m")
+    svc.bound_for("other")                      # evicts m's session
+    out = svc.update("m", _drift(A))
+    assert out["action"] == "resetup" and out["reason"] == "evicted"
+    assert store.stats()["triggers"] == {"evicted": 1}
+    t = svc.submit("m", b, method="pcg")
+    assert svc.drain()[t.rid].shape == b.shape
+
+
+def test_delta_and_data_forms_compose(problem):
+    A, b = problem
+    svc = AMGService(AMGConfig(tol=1e-10))
+    svc.register("m", A)
+    svc.bound_for("m")
+    delta = np.zeros(A.nnz)
+    delta[0] = 0.25
+    assert svc.update("m", delta=delta)["action"] == "refresh"
+    vals = A.data + delta
+    assert svc.update("m", data=vals)["action"] == "refresh"
+    got, _ = svc._lookup_matrix("m")
+    np.testing.assert_array_equal(got.data, vals)
+    with pytest.raises(ValueError, match="not both"):
+        svc.update("m", A, delta=delta)
+
+
+# --------------------------------------------------------------- wire path
+def test_update_over_the_wire_and_404(problem):
+    from repro.serve import (AMGWireClient, RemoteError, ServerThread,
+                             TenantSpec)
+    from repro.serve.workload import json_hop
+    A, b = problem
+    with ServerThread({"t": TenantSpec(config=AMGConfig(tol=1e-8))}) as srv:
+        with AMGWireClient.connect(srv.host, srv.port) as c:
+            # hello negotiation advertised both schema versions
+            assert c.hello["supported_schemas"] == [1, 2] and c.schema == 2
+            mid = c.register("t", json_hop(csr_to_wire(A)))["matrix"]
+            from repro.amg.api import solve_request_to_wire
+            c.solve("t", json_hop(solve_request_to_wire(mid, b,
+                                                        method="pcg")))
+            A2 = _drift(A)
+            up = c.update("t", json_hop(update_request_to_wire(mid, A2)))
+            assert up["action"] == "refresh" and up["reason"] == "drift"
+            x, diag = c.solve("t", json_hop(
+                solve_request_to_wire(mid, b, method="pcg")))
+            res = (np.linalg.norm(b - A2.matvec(np.asarray(x)))
+                   / np.linalg.norm(b))
+            assert diag["converged"] and res < 1e-6
+            # ΔA addressed to an unregistered fingerprint: 404 error frame
+            with pytest.raises(RemoteError) as exc:
+                c.update("t", json_hop(update_request_to_wire(
+                    "deadbeef", delta=np.zeros(A.nnz))))
+            assert exc.value.code == 404
+            # a v1 client cannot send update frames at all
+            c.schema = 1
+            with pytest.raises(RemoteError) as exc:
+                c.update("t", json_hop(update_request_to_wire(mid, A2)))
+            assert exc.value.code == 400
+            c.schema = 2
+            stats = c.stats("t")["tenants"]["t"]
+            assert stats["updated"] == 1
+            assert stats["store"]["refreshes"] == 1
+
+
+# ------------------------------------------------------- store accounting
+def test_session_store_update_counters():
+    store = SessionStore(LRUPolicy())
+    store.note_update("refresh", "drift")
+    store.note_update("resetup", "regression")
+    store.note_update("resetup", "pattern")
+    st = store.stats()
+    assert st["refreshes"] == 1 and st["resetups"] == 2
+    assert st["triggers"] == {"drift": 1, "regression": 1, "pattern": 1}
+    with pytest.raises(ValueError, match="unknown update action"):
+        store.note_update("rebuild", "drift")
+
+
+def test_free_function_solve_unaffected_by_refresh(problem):
+    """The classic free-function path still works after a hierarchy-level
+    refresh (it has no session, so no policy machinery engages)."""
+    A, b = problem
+    h = setup(A)
+    A2 = _drift(A)
+    refresh_values(h, A2)
+    res = solve(h, b, tol=1e-10)
+    r = np.linalg.norm(b - A2.matvec(np.asarray(res.x))) / np.linalg.norm(b)
+    assert r < 1e-8

@@ -4,7 +4,10 @@ The codec is the service's outer wall: every payload is schema-versioned,
 unknown keys are rejected (a future-versioned or corrupt payload fails
 loudly instead of being half-applied), CSR matrices travel with a content
 fingerprint that the decoder re-verifies, and every registered backend's
-config survives dict ↔ wire ↔ dict unchanged.
+config survives dict ↔ wire ↔ dict unchanged.  Schema v2 adds streaming
+``update_request`` payloads and the nested ``options`` dict on solve
+requests; v1 frames must keep decoding on a v2 stack (and v1 frames
+carrying v2-only keys must fail strict decode).
 
 The eviction policies are the session store's serving knobs: LRU must
 reproduce the old module-global cache behavior, TTL must expire idle
@@ -18,11 +21,13 @@ import numpy as np
 import pytest
 
 from repro.amg.api import (AMGConfig, BytesBudgetPolicy, LRUPolicy,
-                           SessionStore, TTLPolicy, WIRE_SCHEMA, WireError,
+                           RequestOptions, SUPPORTED_SCHEMAS, SessionStore,
+                           TTLPolicy, WIRE_SCHEMA, WireError,
                            array_from_wire, array_to_wire,
                            available_backends, csr_from_wire, csr_to_wire,
                            matrix_fingerprint, solve_request_from_wire,
-                           solve_request_to_wire)
+                           solve_request_to_wire, update_request_from_wire,
+                           update_request_to_wire)
 from repro.amg.csr import CSR
 from repro.amg.problems import laplace_3d
 from repro.amg.solve import SolveOptions
@@ -161,14 +166,108 @@ def test_solve_request_round_trip():
         priority="interactive", rid=9)))
     kw = solve_request_from_wire(payload)
     assert kw["matrix_id"] == "abc123"
-    assert kw["method"] == "pcg" and kw["tol"] == 1e-5
-    assert kw["maxiter"] == 17 and kw["rid"] == 9
-    assert kw["priority"] == "interactive"
+    o = kw["options"]
+    assert isinstance(o, RequestOptions)
+    assert o.method == "pcg" and o.tol == 1e-5 and o.maxiter == 17
+    assert kw["rid"] == 9 and kw["priority"] == "interactive"
     np.testing.assert_array_equal(kw["b"], b)
-    np.testing.assert_array_equal(kw["x0"], x0)
-    # optional fields stay absent (service applies its config defaults)
+    np.testing.assert_array_equal(o.x0, x0)
+    # optional fields stay absent (RequestOptions.resolve applies the
+    # service config's defaults later)
     lean = solve_request_from_wire(solve_request_to_wire("m", b[:, 0]))
-    assert set(lean) == {"matrix_id", "b", "method"}
+    assert set(lean) == {"matrix_id", "b", "options"}
+    assert lean["options"].tol is None and lean["options"].maxiter is None
+
+
+def test_solve_request_options_object_round_trips():
+    b = np.ones(5)
+    opts = RequestOptions(method="pcg", tol=1e-4, maxiter=11)
+    payload = json.loads(json.dumps(solve_request_to_wire(
+        "m", b, options=opts)))
+    kw = solve_request_from_wire(payload)
+    back = kw["options"]
+    assert (back.method, back.tol, back.maxiter) == ("pcg", 1e-4, 11)
+    with pytest.raises(ValueError, match="not both"):
+        solve_request_to_wire("m", b, options=opts, tol=1e-3)
+
+
+def test_v1_solve_request_still_decodes():
+    """A v1 frame (flat knob fields, schema tag 1) must decode on the v2
+    stack; a v1 frame smuggling the v2-only nested options dict must not
+    (strict mode)."""
+    assert set(SUPPORTED_SCHEMAS) == {1, 2} and WIRE_SCHEMA == 2
+    b = np.linspace(0, 1, 6)
+    payload = json.loads(json.dumps(solve_request_to_wire(
+        "m", b, method="pcg", tol=1e-5, maxiter=9)))
+    v1 = {**payload, "schema": 1}
+    kw = solve_request_from_wire(v1)
+    o = kw["options"]
+    assert (o.method, o.tol, o.maxiter) == ("pcg", 1e-5, 9)
+    np.testing.assert_array_equal(kw["b"], b)
+    # additive v2 key on a v1-tagged frame: rejected strict, tolerated lax
+    v1_plus = {**v1, "options": {"method": "solve"}}
+    with pytest.raises(WireError, match="v2-only"):
+        solve_request_from_wire(v1_plus)
+    lax = solve_request_from_wire(v1_plus, strict=False)
+    assert lax["options"].method == "solve"
+
+
+# --------------------------------------------------------- update requests
+def test_update_request_round_trip_all_forms():
+    A = laplace_3d(4)
+    # full-CSR form
+    kw = update_request_from_wire(json.loads(json.dumps(
+        update_request_to_wire("mid", A, rid=3))))
+    assert kw["matrix_id"] == "mid" and kw["rid"] == 3
+    _assert_csr_equal(kw["A"], A)
+    # values-on-pattern form
+    vals = A.data * 1.5
+    kw = update_request_from_wire(json.loads(json.dumps(
+        update_request_to_wire("mid", data=vals))))
+    np.testing.assert_array_equal(kw["data"], vals)
+    assert "A" not in kw and "delta" not in kw
+    # additive-delta form
+    kw = update_request_from_wire(json.loads(json.dumps(
+        update_request_to_wire("mid", delta=0.1 * vals))))
+    np.testing.assert_allclose(kw["delta"], 0.1 * vals)
+    # exactly one form, encoder side
+    with pytest.raises(ValueError, match="exactly one"):
+        update_request_to_wire("mid", A, data=vals)
+    with pytest.raises(ValueError, match="exactly one"):
+        update_request_to_wire("mid")
+
+
+def test_update_request_is_v2_only_and_strict():
+    A = laplace_3d(4)
+    payload = json.loads(json.dumps(update_request_to_wire("mid", A)))
+    assert payload["schema"] == 2
+    with pytest.raises(WireError, match="schema"):
+        update_request_from_wire({**payload, "schema": 1})
+    with pytest.raises(WireError, match="unknown key"):
+        update_request_from_wire({**payload, "hint": "fast"})
+    both = dict(payload)
+    both["data"] = array_to_wire(A.data)
+    with pytest.raises(WireError, match="exactly one"):
+        update_request_from_wire(both)
+
+
+# ----------------------------------------------- framed envelope (serve.wire)
+def test_envelope_accepts_every_supported_schema():
+    from repro.serve.wire import check_request_envelope, hello_frame
+    for schema in SUPPORTED_SCHEMAS:
+        assert check_request_envelope(
+            {"schema": schema, "kind": "solve", "seq": 0}) == "solve"
+    # the update kind is v2-only at the envelope level too
+    assert check_request_envelope(
+        {"schema": 2, "kind": "update", "seq": 0}) == "update"
+    with pytest.raises(WireError, match="needs schema >= 2"):
+        check_request_envelope({"schema": 1, "kind": "update", "seq": 0})
+    with pytest.raises(WireError, match="schema version mismatch"):
+        check_request_envelope({"schema": WIRE_SCHEMA + 1, "kind": "solve"})
+    hello = hello_frame(["alpha"])
+    assert hello["kind"] == "hello" and hello["seq"] is None
+    assert hello["supported_schemas"] == list(SUPPORTED_SCHEMAS)
+    assert hello["tenants"] == ["alpha"]
 
 
 # ------------------------------------------------------- eviction policies
