@@ -201,6 +201,65 @@ def cycle_smoother_rows(smoke: bool | None = None):
     return out
 
 
+def comm_audit_rows(smoke: bool | None = None):
+    """Static comm-audit rows: the traced collective counts of the fused
+    vcycle per (cycle, smoother) pair vs the counts the cycle structure +
+    selected strategies predict, plus the setup-phase static-vs-measured
+    SpGEMM exchange counters.  ``us_per_call`` is the audit's own tracing
+    wall clock (never gated); the derived fields are what
+    ``scripts/check_bench.py`` gates structurally: ``collectives`` ==
+    ``expected`` with ``agree=1`` and ``violations=0``, and — for the
+    ``comm_audit_setup_L*`` rows — static == runtime message counts."""
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    import jax
+
+    from repro.amg import SolveOptions, setup
+    from repro.amg.dist_setup import dist_setup_partitioned
+    from repro.amg.dist_solve import DistHierarchy
+    from repro.amg.problems import laplace_3d
+    from repro.amg.solve import CYCLES, SMOOTHERS
+    from repro.analysis import audit_cycle_stats, audit_program, audit_setup
+    from repro.core import BLUE_WATERS
+
+    n = 8 if smoke else 12
+    n_pods, lanes = _mesh_shape(jax.device_count())
+    A = laplace_3d(n)
+    h = setup(A, solver="rs", max_coarse=30)
+    dh = DistHierarchy.build(h, n_pods, lanes, params=BLUE_WATERS)
+    out = []
+    for cycle in CYCLES:
+        for sm in SMOOTHERS:
+            opts = SolveOptions(cycle=cycle, smoother=sm)
+            t0 = time.perf_counter()
+            a = audit_program(dh, "vcycle", opts)
+            stat_v = audit_cycle_stats(dh, opts)
+            dt = time.perf_counter() - t0
+            n_vio = len(a.violations) + len(stat_v)
+            expected = sum((a.expected or {}).values())
+            out.append((
+                f"comm_audit_{cycle}_{sm}", dt * 1e6,
+                f"mesh={n_pods}x{lanes};collectives={a.n_collectives};"
+                f"expected={expected};bytes={a.total_bytes};"
+                f"agree={int(a.counts == a.expected)};violations={n_vio}"))
+    plv, recs = dist_setup_partitioned(A, n_pods, lanes, solver="rs",
+                                       max_coarse=30)
+    t0 = time.perf_counter()
+    audit_rows, vio = audit_setup(plv, recs)
+    dt = time.perf_counter() - t0
+    for r in audit_rows:
+        out.append((
+            f"comm_audit_setup_L{r['level']}_{r['op']}",
+            dt / max(len(audit_rows), 1) * 1e6,
+            f"strategy={r['strategy']};"
+            f"static_inter_msgs={r['static_inter_msgs']};"
+            f"runtime_inter_msgs={r['runtime_inter_msgs']};"
+            f"static_intra_msgs={r['static_intra_msgs']};"
+            f"runtime_intra_msgs={r['runtime_intra_msgs']};"
+            f"violations={len(vio)}"))
+    return out
+
+
 def weak_rows(smoke: bool | None = None, cycles: int | None = None):
     """Weak-scaling sweep: ≥3 problem sizes through the model-selected
     fused cycle on the same mesh — µs/cycle as DOFs/device grows."""
@@ -458,6 +517,7 @@ def main(argv=None) -> None:
         from serve_load import serving_latency_rows
     data = (rows(smoke=args.smoke) + cycle_smoother_rows(smoke=args.smoke)
             + overlap_rows(smoke=args.smoke)
+            + comm_audit_rows(smoke=args.smoke)
             + weak_rows(smoke=args.smoke) + session_rows(smoke=args.smoke)
             + streaming_rows(smoke=args.smoke)
             + serving_rows(smoke=args.smoke)

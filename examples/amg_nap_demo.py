@@ -74,6 +74,16 @@ escalates to exactly one full node-aware re-setup.  The drift-sweep table
 prints per step what the session did (action, trigger, wall clock,
 iterations); the refresh must be measurably cheaper than the re-setup.
 
+Part 10 (static analysis): the communication the programs *actually*
+compile to.  ``repro.analysis`` walks the jaxpr of every fused program,
+counts the collective primitives, and the table prints them next to the
+counts the cycle structure + per-level selected strategies predict — the
+same cross-check CI runs (``python -m repro.analysis``), which is what
+catches a NAP lowering silently regressing to a flat collective.  The
+lint pass (raw collectives outside ``core/nap_collectives.py``, blocking
+calls in coroutines, host calls inside traced code, frozen-dataclass
+mutation) runs over ``src/`` and must come back empty.
+
     PYTHONPATH=src python examples/amg_nap_demo.py
 """
 import os
@@ -499,6 +509,43 @@ def streaming_demo(n_pods: int = 2, lanes: int = 4):
           "adaptive re-setup on regression")
 
 
+def static_analysis_demo(n_pods: int = 2, lanes: int = 4):
+    import pathlib
+
+    from repro.amg.dist_solve import DistHierarchy
+    from repro.analysis import (PROGRAM_NAMES, audit_cycle_stats,
+                                audit_program, lint_paths)
+
+    print("\n=== static analysis: traced collectives vs the count model, "
+          "plus lint ===")
+    A = laplace_3d(8)
+    h = setup(A, solver="rs", max_coarse=30)
+    dh = DistHierarchy.build(h, n_pods, lanes, params=BLUE_WATERS)
+    print(f"auditing {len(PROGRAM_NAMES)} fused programs on the "
+          f"{n_pods}x{lanes} mesh ({len(dh.levels)} levels, per-level "
+          f"model-selected strategies)")
+
+    def fmt(counts):
+        return " ".join(f"{p}={c}" for p, c in sorted(counts.items()))
+
+    print(f"\n  {'program':<14} {'collectives':>11}  counts (traced | model)")
+    n_bad = 0
+    for name in PROGRAM_NAMES:
+        a = audit_program(dh, name)
+        n_bad += len(a.violations)
+        mark = "" if a.ok else "  <-- VIOLATION"
+        print(f"  {a.program:<14} {a.n_collectives:>11}  "
+              f"{fmt(a.counts)} | {fmt(a.expected)}{mark}")
+    stat_v = audit_cycle_stats(dh)
+    src = pathlib.Path(__file__).parents[1] / "src"
+    lint_v = lint_paths(src)
+    print(f"\n  model-vs-static agreement: {len(stat_v)} violations; "
+          f"lint over src/: {len(lint_v)} violations")
+    assert n_bad == 0 and not stat_v and not lint_v
+    print("static analysis OK: every traced program carries exactly the "
+          "strategy-predicted collectives; the tree is lint-clean")
+
+
 def main():
     simulator_study()
     dist_solve_demo()
@@ -509,6 +556,7 @@ def main():
     wire_serving_demo()
     overlap_demo()
     streaming_demo()
+    static_analysis_demo()
 
 
 if __name__ == "__main__":

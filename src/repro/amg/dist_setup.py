@@ -478,7 +478,8 @@ def dist_setup_partitioned(
         if aggressive:
             GG = dist_spgemm(Gb, Gb, params=params, strategy=strategy,
                              strategies=strategies, op="spgemm_S2",
-                             level=l, records=records)
+                             level=l, records=records,
+                             plan_cache=plevels[l].plans)
             Gb = _sym_graph_blocks(GG, transpose_blocks(GG, part))
         # w = (#strong transpose connections) + replicated random tiebreak —
         # every rank draws the same deterministic stream, as an SPMD code

@@ -44,13 +44,16 @@ residual norm per outer iteration.
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.compat import shard_map
-from ..core.nap_collectives import hier_all_gather, hier_psum
+from ..core.nap_collectives import (gather_signature, halo_signature,
+                                    hier_all_gather, hier_psum,
+                                    reduce_signature)
 from ..core.perf_model import (TPU_V5E, MachineParams, overlap_efficiency,
                                spmv_compute_times)
 from ..core.selector import select
@@ -523,7 +526,9 @@ class DistHierarchy:
     def _pdot(self, a, b):
         part = jnp.sum(a * b)
         if self.reduce_strategy == "flat":
-            return jax.lax.psum(part, DEV_AXES)
+            # scalar all-reduce: flat is the REDUCE_SIGNATURES["flat"]
+            # baseline the hierarchical strategy is measured against
+            return jax.lax.psum(part, DEV_AXES)  # comm-audit: allow flat-psum
         return hier_psum(part, *DEV_AXES, strategy=self.reduce_strategy)
 
     def _pnorm(self, r):
@@ -533,7 +538,7 @@ class DistHierarchy:
         """Per-column dot for [local, k] operands → replicated [k]."""
         part = jnp.sum(a * b, axis=0)
         if self.reduce_strategy == "flat":
-            return jax.lax.psum(part, DEV_AXES)
+            return jax.lax.psum(part, DEV_AXES)  # comm-audit: allow flat-psum
         return hier_psum(part, *DEV_AXES, strategy=self.reduce_strategy)
 
     def _relax(self, dl: DistLevel, arrs: dict, x, b, opts, sweeps: int):
@@ -789,6 +794,108 @@ class DistHierarchy:
         }
         self._programs[key] = (progs, run_arrs)
         return self._programs[key]
+
+    # ------------------------------------------------- static-analysis hooks
+    # Introspection surface consumed by repro.analysis.comm_audit: trace any
+    # compiled program / single apply to its ClosedJaxpr, and state the
+    # collective structure the selected strategies predict for it.  Tracing
+    # is abstract — nothing runs on devices.
+
+    def expected_apply_signature(self, level: int,
+                                 op: str = "A") -> tuple[str, ...]:
+        """Ordered collectives ONE apply of ``levels[level].<op>`` must
+        lower to (the operator's selected halo-exchange strategy; empty on
+        an empty-halo level)."""
+        return getattr(self.levels[level], op).expected_signature
+
+    def trace_apply(self, level: int, op: str = "A", *,
+                    overlap: bool | None = None, k: int | None = None):
+        """ClosedJaxpr of one shard_mapped apply of ``levels[level].<op>``
+        (``k`` adds a trailing multi-RHS axis)."""
+        overlap = self.overlap if overlap is None else overlap
+        dop = getattr(self.levels[level], op)
+        arrs = self._arrs[level][op]
+        dev = self._dev_spec
+
+        def body(x, a):
+            x = x[0]
+            a = jax.tree_util.tree_map(lambda v: v[0], a)
+            return dop.apply(a, x, use_kernel=self.use_kernel,
+                             interpret=self.interpret, overlap=overlap)[None]
+
+        fn = shard_map(body, mesh=self.mesh, in_specs=(dev, dev),
+                       out_specs=dev, check_vma=False)
+        D = self.n_pods * self.lanes
+        shape = (D, dop.plan.local_n) + (() if k is None else (k,))
+        return jax.make_jaxpr(fn)(jnp.zeros(shape, self.dtype), arrs)
+
+    def trace_program(self, name: str, opts=None, k: int = 2):
+        """ClosedJaxpr of the compiled fused program ``name`` for ``opts``
+        (the exact cached callables :meth:`programs` hands the solvers,
+        traced on zero operands of the program's shapes; ``k`` is the
+        multi-RHS width of the ``*_m`` variants)."""
+        opts = opts or SolveOptions()
+        progs, arrs = self.programs(opts)
+        D = self.n_pods * self.lanes
+        n = self.levels[0].A.plan.local_n
+        multi = name.endswith("_m")
+        vec = jnp.zeros((D, n, k) if multi else (D, n), self.dtype)
+        rz = jnp.zeros((k,) if multi else (), self.dtype)
+        base = name[:-2] if multi else name
+        args = {"resid_norm": (vec, vec, arrs),
+                "cycle": (vec, vec, arrs),
+                "vcycle": (vec, arrs),
+                "pcg_init": (vec, vec, arrs),
+                "pcg_step": (vec, vec, vec, rz, arrs)}[base]
+        return jax.make_jaxpr(progs[name])(*args)
+
+    def _cycle_collectives(self, opts) -> Counter:
+        """Per-primitive collective counts ONE cycle of ``opts`` predicts:
+        the same visits × (sweeps + residual + restrict + interpolate)
+        arithmetic as :func:`cycle_comm_stats`, but counting each selected
+        strategy's lowered primitives instead of modeled messages."""
+        visits = level_visits(len(self.levels), opts.cycle)
+        sweep_spmvs = opts.spmvs_per_sweep() * (opts.presweeps
+                                                + opts.postsweeps)
+        cnt: Counter = Counter()
+
+        def add(sig, times=1):
+            for p in sig:
+                cnt[p] += times
+
+        for l, dl in enumerate(self.levels):
+            if dl.coarse_inv is not None:
+                # distributed direct solve: hier_all_gather of the coarse
+                # residual (default NAP-3 lowering)
+                add(gather_signature("nap3"), visits[l])
+            else:
+                add(halo_signature(dl.A.plan), (sweep_spmvs + 1) * visits[l])
+                add(halo_signature(dl.R.plan), visits[l])
+                add(halo_signature(dl.P.plan), visits[l])
+        return cnt
+
+    def expected_collectives(self, opts=None,
+                             name: str = "cycle") -> dict[str, int]:
+        """Per-primitive collective counts the lowered fused program
+        ``name`` must contain — cycle structure plus the program's own
+        top-level SpMV and all-reduce calls.  The ``*_m`` variants are
+        identical: a batched collective is still one equation."""
+        opts = opts or SolveOptions()
+        base = name[:-2] if name.endswith("_m") else name
+        total: Counter = Counter()
+
+        def add(sig, times=1):
+            for p in sig:
+                total[p] += times
+
+        if base in ("cycle", "vcycle", "pcg_init", "pcg_step"):
+            total += self._cycle_collectives(opts)
+        if base in ("resid_norm", "cycle", "pcg_init", "pcg_step"):
+            add(halo_signature(self.levels[0].A.plan))   # top-level residual
+        add(reduce_signature(self.reduce_strategy),
+            {"resid_norm": 1, "cycle": 1, "vcycle": 0,
+             "pcg_init": 2, "pcg_step": 3}[base])
+        return {p: c for p, c in total.items() if c}
 
 
 # --------------------------------------------------------------------------

@@ -30,7 +30,8 @@ import numpy as np
 
 from ..core.comm_graph import CommGraph
 from ..core.compat import shard_map
-from ..core.nap_collectives import HaloPlan, build_halo_plan, halo_exchange
+from ..core.nap_collectives import (HaloPlan, build_halo_plan, halo_exchange,
+                                    halo_signature)
 from ..core.topology import Partition, Topology
 from .csr import CSR
 from .dist import rect_vector_graph
@@ -135,6 +136,13 @@ class DistOperator:
     def local_kernel(self) -> str:
         """Layout label for reporting: 'bcsr' once lowered, else 'ell'."""
         return "bcsr" if self.bcsr_bcols is not None else "ell"
+
+    @property
+    def expected_signature(self) -> tuple[str, ...]:
+        """Ordered collective primitives ONE apply of this operator must
+        lower to — the selected strategy's halo signature, empty when the
+        halo is (the comm auditor's per-operator contract)."""
+        return halo_signature(self.plan)
 
     def onoff_nnz(self) -> dict[str, int]:
         """Total and per-device-max nnz of the on/off split (for the

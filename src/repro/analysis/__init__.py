@@ -1,0 +1,23 @@
+"""Static-analysis subsystem (CI-gated): the jaxpr-level communication
+auditor (Pass 1, :mod:`~repro.analysis.comm_audit`) and the ``ast``-based
+repo-invariant lint (Pass 2, :mod:`~repro.analysis.lint`).
+
+Run both with ``python -m repro.analysis [--json report.json]``.
+"""
+from .comm_audit import (PROGRAM_NAMES, audit_apply, audit_cycle_stats,
+                         audit_hierarchy, audit_jaxpr, audit_program,
+                         audit_setup)
+from .jaxpr_walk import (check_overlap_independence, collect_collectives,
+                         collective_signature)
+from .lint import lint_paths, lint_source
+from .records import AuditViolation, CollectiveRecord, CommAudit, LintViolation
+from .report import build_report, format_summary, write_report
+
+__all__ = [
+    "PROGRAM_NAMES", "AuditViolation", "CollectiveRecord", "CommAudit",
+    "LintViolation", "audit_apply", "audit_cycle_stats", "audit_hierarchy",
+    "audit_jaxpr", "audit_program", "audit_setup", "build_report",
+    "check_overlap_independence", "collect_collectives",
+    "collective_signature", "format_summary", "lint_paths", "lint_source",
+    "write_report",
+]

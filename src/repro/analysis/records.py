@@ -1,0 +1,138 @@
+"""Typed records of the static-analysis subsystem.
+
+Pass 1 (:mod:`repro.analysis.comm_audit`) produces :class:`CommAudit`
+records — one per audited program, listing every collective primitive the
+traced jaxpr contains as a :class:`CollectiveRecord` — and raises/collects
+:class:`AuditViolation` on any mismatch against the expected structure.
+Pass 2 (:mod:`repro.analysis.lint`) produces :class:`LintViolation` rows.
+Everything is JSON-serializable via ``to_dict`` for the machine-readable
+report ``python -m repro.analysis --json`` writes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One collective primitive found in a traced program.
+
+    ``primitive`` is the canonical name (``psum`` / ``psum_scatter`` /
+    ``all_gather`` / ``all_to_all`` / ``ppermute`` — the jaxpr's
+    ``reduce_scatter`` is normalized to ``psum_scatter``); ``bytes`` is the
+    static operand payload (operand element count × itemsize), the quantity
+    the paper's per-schedule byte counts model.
+    """
+
+    primitive: str
+    axes: tuple[str, ...]
+    operand_shape: tuple[int, ...]
+    operand_dtype: str
+    out_shape: tuple[int, ...]
+    bytes: int
+    eqn_index: int               # position in the flattened recursive walk
+
+    def to_dict(self) -> dict:
+        return {"primitive": self.primitive, "axes": list(self.axes),
+                "operand_shape": list(self.operand_shape),
+                "operand_dtype": self.operand_dtype,
+                "out_shape": list(self.out_shape),
+                "bytes": self.bytes, "eqn_index": self.eqn_index}
+
+
+class AuditViolation(Exception):
+    """A mismatch between a program's lowered collectives and the structure
+    the selected strategy predicts.
+
+    Typed (``kind``) and attributed: ``program`` names the audited fused
+    program or apply, ``level``/``op`` pin the hierarchy operator when the
+    audit runs at per-operator granularity, and ``eqn`` carries the
+    offending :class:`CollectiveRecord` (or its repr) when one equation is
+    identifiable.
+    """
+
+    def __init__(self, kind: str, message: str, *, program: str | None = None,
+                 level: int | None = None, op: str | None = None,
+                 eqn: object | None = None):
+        where = program or ""
+        if level is not None:
+            where += f" L{level}"
+        if op is not None:
+            where += f".{op}"
+        super().__init__(f"[{kind}] {where.strip()}: {message}"
+                         if where.strip() else f"[{kind}] {message}")
+        self.kind = kind
+        self.message = message
+        self.program = program
+        self.level = level
+        self.op = op
+        self.eqn = eqn
+
+    def to_dict(self) -> dict:
+        eqn = self.eqn
+        if isinstance(eqn, CollectiveRecord):
+            eqn = eqn.to_dict()
+        elif eqn is not None:
+            eqn = str(eqn)
+        return {"kind": self.kind, "message": self.message,
+                "program": self.program, "level": self.level,
+                "op": self.op, "eqn": eqn}
+
+
+@dataclasses.dataclass
+class CommAudit:
+    """The audit record of one traced program: every collective found, the
+    per-primitive counts, the expected counts (when an expectation applies)
+    and any violations raised while checking them."""
+
+    program: str
+    records: list[CollectiveRecord]
+    counts: dict[str, int]
+    expected: dict[str, int] | None = None
+    level: int | None = None
+    op: str | None = None
+    violations: list[AuditViolation] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_collectives(self) -> int:
+        return len(self.records)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.bytes for r in self.records)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def signature(self) -> tuple[str, ...]:
+        """Ordered canonical primitive names, as traced."""
+        return tuple(r.primitive for r in self.records)
+
+    def to_dict(self) -> dict:
+        return {"program": self.program, "level": self.level, "op": self.op,
+                "counts": dict(self.counts),
+                "expected": None if self.expected is None
+                else dict(self.expected),
+                "n_collectives": self.n_collectives,
+                "total_bytes": self.total_bytes,
+                "ok": self.ok,
+                "violations": [v.to_dict() for v in self.violations],
+                "records": [r.to_dict() for r in self.records]}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    """One rule violation in one source file (Pass 2)."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"

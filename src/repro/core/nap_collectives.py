@@ -37,6 +37,61 @@ from .compat import axis_size as _axis_size
 from .schedules import Schedule, build as build_schedule
 
 # --------------------------------------------------------------------------
+# Expected-primitive signatures (the static-analysis contract)
+# --------------------------------------------------------------------------
+# Ordered canonical collective-primitive names each strategy lowers to, in
+# trace order.  :mod:`repro.analysis.comm_audit` walks the jaxpr of every
+# compiled program and checks the collectives it finds against these tables
+# — change a lowering in this module and the auditor fails until the
+# matching signature is updated, which is the point: the schedule the §4
+# model *selected* and the schedule the program *contains* can never
+# silently diverge.  "psum_scatter" is the canonical name for the jaxpr's
+# ``reduce_scatter`` primitive (see repro.analysis.jaxpr_walk.CANONICAL).
+
+# halo_exchange: per executed exchange (a plan with total_halo == 0 skips
+# the exchange entirely — see halo_signature)
+HALO_SIGNATURES: dict[str, tuple[str, ...]] = {
+    "standard": ("all_to_all", "all_to_all"),
+    "nap2": ("all_to_all", "all_gather"),
+    "nap3": ("all_gather", "all_to_all", "all_gather"),
+}
+# hier_psum: per all-reduce (the solver's dots and norms)
+REDUCE_SIGNATURES: dict[str, tuple[str, ...]] = {
+    "flat": ("psum",),
+    "nap3": ("psum_scatter", "psum", "all_gather"),
+}
+# hier_all_gather: per gather (the coarsest-level direct solve)
+GATHER_SIGNATURES: dict[str, tuple[str, ...]] = {
+    "flat": ("all_gather",),
+    "nap3": ("all_gather", "all_gather"),
+}
+# hier_all_to_all: per shuffle (the MoE dispatch consumer)
+ALL_TO_ALL_SIGNATURES: dict[str, tuple[str, ...]] = {
+    "flat": ("all_to_all",),
+    "nap3": ("all_to_all", "all_to_all"),
+}
+
+
+def halo_signature(plan: "HaloPlan") -> tuple[str, ...]:
+    """Collectives ONE :func:`halo_exchange` under ``plan`` must lower to —
+    empty when the plan moves nothing (``total_halo == 0``: the apply skips
+    the exchange and the program must contain no collective for it)."""
+    if plan.total_halo == 0:
+        return ()
+    return HALO_SIGNATURES[plan.strategy]
+
+
+def reduce_signature(strategy: str) -> tuple[str, ...]:
+    """Collectives one :func:`hier_psum` call with ``strategy`` lowers to."""
+    return REDUCE_SIGNATURES[strategy]
+
+
+def gather_signature(strategy: str = "nap3") -> tuple[str, ...]:
+    """Collectives one :func:`hier_all_gather` call lowers to."""
+    return GATHER_SIGNATURES[strategy]
+
+
+# --------------------------------------------------------------------------
 # Generic hierarchical collectives (LM training / MoE consumers)
 # --------------------------------------------------------------------------
 

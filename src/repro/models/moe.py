@@ -66,7 +66,9 @@ def _expert_ffn(w, h, act, tp_axis: str | None = None):
     gated = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
     out = jnp.einsum("ecf,efd->ecd", gated, w["down"])
     if tp_axis is not None:
-        out = jax.lax.psum(out, tp_axis)
+        # single-axis TP reduce: no (slow, fast) split exists to aggregate
+        # over, so the flat form IS the strategy here
+        out = jax.lax.psum(out, tp_axis)  # comm-audit: allow flat-psum
     return out
 
 
@@ -161,8 +163,9 @@ def moe_ffn_ep(p, cfg, x, mesh_axes=("model",), nap: bool = False,
         if len(mesh_axes) == 2:
             from ..core.nap_collectives import hier_all_to_all
             return hier_all_to_all(buf, mesh_axes[0], mesh_axes[1], "flat")
-        return jax.lax.all_to_all(buf, mesh_axes[0], split_axis=0,
-                                  concat_axis=0, tiled=True)
+        # single expert-parallel axis: nothing hierarchical to route
+        return jax.lax.all_to_all(buf, mesh_axes[0],  # comm-audit: allow flat-a2a
+                                  split_axis=0, concat_axis=0, tiled=True)
 
     recv = a2a(send).reshape(m, e_loc, cap, d)          # [peers, e_loc, cap, d]
     h = recv.transpose(1, 0, 2, 3).reshape(e_loc, m * cap, d)

@@ -10,6 +10,9 @@ Error feedback keeps the quantization unbiased over time: the residual of
 each quantization is added to the next step's gradient (Karimireddy et al.
 style), so compression does not change the fixed point.
 """
+# comm-audit: allow-file raw-collective — this module IS a hierarchical
+# collective implementation (the int8 variant of nap_collectives.hier_psum
+# with error feedback); its RS/AR/AG legs are the primitives themselves.
 from __future__ import annotations
 
 import jax

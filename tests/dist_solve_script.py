@@ -164,14 +164,57 @@ def main():
     spE = build_dist_spmv(CSR.from_coo(rE, cE, denseE[rE, cE], (nE, nE)),
                           8, 1, "standard", dtype=np.float64)
     assert spE.op.halo_empty and spE.op.onoff_nnz()["off_nnz"] == 0
-    jxp = str(jax.make_jaxpr(spE.fn)(jnp.zeros((8, spE.op.plan.local_n),
-                                               dtype=jnp.float64)))
-    for prim in ("ppermute", "all_to_all", "all_gather"):
-        assert prim not in jxp, prim
+    from repro.analysis import audit_jaxpr, collect_collectives
+
+    jxp = jax.make_jaxpr(spE.fn)(jnp.zeros((8, spE.op.plan.local_n),
+                                           dtype=jnp.float64))
+    assert collect_collectives(jxp) == []          # structural, not substring
+    assert audit_jaxpr(jxp, "apply_A",
+                       expected_signature=spE.op.expected_signature).ok
     xE = rngE.normal(size=nE)
     np.testing.assert_allclose(spE.matvec(xE), denseE @ xE, rtol=0,
                                atol=1e-11)
     print("OK empty_halo")
+
+    # comm audit on the real 2x4 mesh: every fused program of every
+    # (cycle, smoother) pair plus PCG and the *_m variants lowers exactly
+    # the collectives its selected strategies predict, every per-operator
+    # apply matches its ordered halo signature (with the on-process
+    # contraction dataflow-independent of the exchange), and the modeled
+    # cycle_comm_stats counters agree with the static plans
+    from repro.analysis import audit_hierarchy
+    from repro.core.nap_collectives import (HALO_SIGNATURES,
+                                            REDUCE_SIGNATURES)
+
+    audits, violations = audit_hierarchy(dh64)
+    assert not violations, [str(v) for v in violations]
+    assert len(audits) >= 15 * 2 + 10, len(audits)
+    # golden ordered signatures on the 2x4 mesh: the finest A communicates
+    # with its selected strategy's exact lowering
+    sigA = [a for a in audits if a.program == "apply_A" and a.level == 0]
+    assert sigA and sigA[0].signature() == HALO_SIGNATURES[
+        dh64.levels[0].A.strategy]
+    # NAP-3 hier_psum shows up in resid_norm as RS(fast)+AR(slow)+AG(fast)
+    rn = next(a for a in audits if a.program == "resid_norm")
+    assert all(rn.counts.get(p, 0) >= 1
+               for p in REDUCE_SIGNATURES[dh64.reduce_strategy]), rn.counts
+    # injected regression: silently lowering hier_psum to a flat psum must
+    # be caught as a count mismatch on a freshly built hierarchy
+    import repro.amg.dist_solve as _ds
+    from repro.analysis import audit_program
+
+    orig_hier_psum = _ds.hier_psum
+    _ds.hier_psum = lambda x, slow, fast, strategy="nap3": \
+        jax.lax.psum(x, (slow, fast))
+    try:
+        dh_bad = DistHierarchy.build(h3, N_PODS, LANES, params=BLUE_WATERS,
+                                     dtype=jnp.float64)
+        bad = audit_program(dh_bad, "resid_norm")
+        kinds = [v.kind for v in bad.violations]
+        assert "count-mismatch" in kinds, (kinds, bad.counts, bad.expected)
+    finally:
+        _ds.hier_psum = orig_hier_psum
+    print("OK comm_audit")
 
     # the symmetric hybrid GS sweep is an SPD preconditioner: dist PCG with
     # it converges on the 2x4 mesh and matches the host PCG history ≤1e-7

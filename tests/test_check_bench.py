@@ -153,19 +153,62 @@ STREAMING_DERIVED = ("n=512;mesh=2x4;steps=4;solves=5;refreshes=3;"
                      "resetup_us=38000.0;speedup=2.4")
 
 
+COMM_AUDIT_DERIVED = ("mesh=2x4;collectives=24;expected=24;bytes=15480;"
+                      "agree=1;violations=0")
+COMM_AUDIT_SETUP_DERIVED = ("strategy=standard;static_inter_msgs=2;"
+                            "runtime_inter_msgs=2;static_intra_msgs=12;"
+                            "runtime_intra_msgs=12;violations=0")
+
+
 def test_overlap_rows_required_with_cycle_sweep(tmp_path):
-    """A run with the dist-solve cycle sweep but no overlap (or streaming)
-    rows fails."""
+    """A run with the dist-solve cycle sweep but no overlap (or streaming,
+    or comm-audit) rows fails."""
     cyc = row("dist_cycle_V_jacobi", "iters=7;conv=0.17;inter_msgs=10")
     ovl = row("dist_overlap_L0",
               "on_nnz=1;off_nnz=1;local_nnz=2;eff_modeled=0.0")
     ovc = row("dist_overlap_cycle_V",
               "serial_us=10.0;overlap_us=9.0;speedup=1.1")
     stm = row("streaming_refresh", STREAMING_DERIVED)
+    aud = row("comm_audit_V_jacobi", COMM_AUDIT_DERIVED)
+    aus = row("comm_audit_setup_L0_spgemm_AP", COMM_AUDIT_SETUP_DERIVED)
     assert run(tmp_path, [cyc], [cyc]) == 1              # all missing
     assert run(tmp_path, [cyc], [cyc, ovl]) == 1         # cycle row missing
     assert run(tmp_path, [cyc], [cyc, ovl, ovc]) == 1    # streaming missing
-    assert run(tmp_path, [cyc], [cyc, ovl, ovc, stm]) == 0
+    assert run(tmp_path, [cyc], [cyc, ovl, ovc, stm]) == 1   # audit missing
+    assert run(tmp_path, [cyc],
+               [cyc, ovl, ovc, stm, aud]) == 1       # setup audit missing
+    assert run(tmp_path, [cyc], [cyc, ovl, ovc, stm, aud, aus]) == 0
+
+
+def test_comm_audit_rows_gate_model_agreement(tmp_path):
+    """comm_audit_* rows: traced collective counts must equal the model's
+    predicted counts with zero violations; comm_audit_setup_L* rows must
+    show measured == static exchange counters."""
+    good = row("comm_audit_V_jacobi", COMM_AUDIT_DERIVED)
+    assert run(tmp_path, [good], [good]) == 0
+    drift = [row("comm_audit_V_jacobi",
+                 COMM_AUDIT_DERIVED.replace("expected=24", "expected=23"))]
+    assert run(tmp_path, [good], drift) == 1
+    disagree = [row("comm_audit_V_jacobi",
+                    COMM_AUDIT_DERIVED.replace("agree=1", "agree=0"))]
+    assert run(tmp_path, [good], disagree) == 1
+    vio = [row("comm_audit_V_jacobi",
+               COMM_AUDIT_DERIVED.replace("violations=0", "violations=2"))]
+    assert run(tmp_path, [good], vio) == 1
+    nan_c = [row("comm_audit_V_jacobi",
+                 COMM_AUDIT_DERIVED.replace("collectives=24",
+                                            "collectives=nan"))]
+    assert run(tmp_path, [good], nan_c) == 1
+    setup_good = row("comm_audit_setup_L0_spgemm_AP",
+                     COMM_AUDIT_SETUP_DERIVED)
+    assert run(tmp_path, [setup_good], [setup_good]) == 0
+    setup_bad = [row("comm_audit_setup_L0_spgemm_AP",
+                     COMM_AUDIT_SETUP_DERIVED.replace(
+                         "runtime_intra_msgs=12", "runtime_intra_msgs=11"))]
+    assert run(tmp_path, [setup_good], setup_bad) == 1
+    setup_short = [row("comm_audit_setup_L0_spgemm_AP",
+                       "strategy=standard;static_inter_msgs=2;violations=0")]
+    assert run(tmp_path, [setup_good], setup_short) == 1
 
 
 def test_streaming_rows_gate_refresh_beats_resetup(tmp_path):

@@ -25,7 +25,8 @@ EXPECTED = [
     "OK solve_nap3", "OK pcg_nap3",
     "OK auto_select", "OK pallas_path", "OK chebyshev",
     "OK cycle_smoother_parity", "OK overlap_parity", "OK empty_halo",
-    "OK dist_setup_cycles", "OK multi_rhs", "OK streaming_refresh",
+    "OK comm_audit", "OK dist_setup_cycles", "OK multi_rhs",
+    "OK streaming_refresh",
     "ALL_OK",
 ]
 
